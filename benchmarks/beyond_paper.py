@@ -1,0 +1,102 @@
+"""Beyond-paper algorithm ablations (not in the paper; see DESIGN.md):
+
+1. UCB exploration vs the paper's Eq. 4 mixed policy: episodes until the
+   network first reaches 95% of the optimal mean local reward, and final
+   regret.
+2. Expected-delivery reward r = a1*lam*(1-P_D) - a2*P_D vs the paper's
+   additive Eq. 2: expected *delivered* diversity of the final graph under
+   the channel (sum of lam(i,a_i)*(1-P_D(i,a_i)))."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import channel as ch
+from repro.core import dissimilarity as ds
+from repro.core import qlearning as ql
+from repro.core import rewards as rw
+from repro.core import trust as tr
+from repro.core.pipeline import PipelineConfig
+
+
+def _world(key, n=12):
+    """Synthetic lambda + channel: ground truth known."""
+    k1, k2 = jax.random.split(key)
+    lam = jax.random.randint(k1, (n, n), 0, 6)
+    lam = lam.at[jnp.arange(n), jnp.arange(n)].set(0)
+    pf = ch.failure_prob(ch.make_rss(k2, n))
+    return lam, pf
+
+
+def episodes_to_opt(graph: ql.GraphResult, local_r, frac=0.95):
+    n = local_r.shape[0]
+    opt = float(jnp.mean(jnp.max(
+        local_r.at[jnp.arange(n), jnp.arange(n)].set(-jnp.inf), axis=1)))
+    ep = np.asarray(graph.ep_mean_local)
+    hits = np.nonzero(ep >= frac * opt)[0]
+    return (int(hits[0]) if hits.size else len(ep)), opt, float(ep[-1])
+
+
+def run_policy_ablation(seeds=5):
+    rows = []
+    for s in range(seeds):
+        lam, pf = _world(jax.random.PRNGKey(s))
+        local_r = rw.local_reward_matrix(lam, pf)
+        for policy in ("mixed", "ucb"):
+            cfg = ql.RLConfig(n_episodes=600, buffer_size=90, policy=policy)
+            g = ql.discover_graph(jax.random.PRNGKey(100 + s), local_r, pf,
+                                  cfg)
+            e95, opt, final = episodes_to_opt(g, local_r)
+            n = local_r.shape[0]
+            graph_r = float(jnp.mean(local_r[jnp.arange(n), g.in_edge]))
+            rows.append({"seed": s, "policy": policy, "episodes_to_95": e95,
+                         "final_mean_reward": final, "optimal": opt,
+                         "final_graph_reward": graph_r})
+    return rows
+
+
+def run_reward_ablation(seeds=5):
+    rows = []
+    for s in range(seeds):
+        lam, pf = _world(jax.random.PRNGKey(10 + s))
+        for kind in ("paper", "expected"):
+            local_r = rw.local_reward_matrix(lam, pf,
+                                             rw.RewardConfig(kind=kind))
+            g = ql.discover_graph(jax.random.PRNGKey(200 + s), local_r, pf)
+            n = lam.shape[0]
+            idx = jnp.arange(n)
+            delivered = float(jnp.sum(
+                lam[idx, g.in_edge] * (1 - pf[idx, g.in_edge])))
+            rows.append({"seed": s, "reward": kind,
+                         "expected_delivered_lambda": delivered})
+    return rows
+
+
+def main(quick=True):
+    seeds = 3 if quick else 10
+    pol = run_policy_ablation(seeds)
+    C.save_json("beyond_policy", {"rows": pol})
+    med = lambda rows, p, k: float(np.median(
+        [r[k] for r in rows if r["policy"] == p]))
+    print(f"beyond_ucb,0,episodes_to_95_mixed="
+          f"{med(pol, 'mixed', 'episodes_to_95'):.0f};"
+          f"episodes_to_95_ucb={med(pol, 'ucb', 'episodes_to_95'):.0f};"
+          f"final_mixed={med(pol, 'mixed', 'final_mean_reward'):.3f};"
+          f"final_ucb={med(pol, 'ucb', 'final_mean_reward'):.3f};"
+          f"graph_mixed={med(pol, 'mixed', 'final_graph_reward'):.3f};"
+          f"graph_ucb={med(pol, 'ucb', 'final_graph_reward'):.3f};"
+          f"optimal={med(pol, 'mixed', 'optimal'):.3f}")
+    rew = run_reward_ablation(seeds)
+    C.save_json("beyond_reward", {"rows": rew})
+    medr = lambda k: float(np.median(
+        [r["expected_delivered_lambda"] for r in rew if r["reward"] == k]))
+    print(f"beyond_reward,0,delivered_lambda_paper={medr('paper'):.2f};"
+          f"delivered_lambda_expected={medr('expected'):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Shared benchmark world: datasets, partitions, pipeline variants.
+
+Every figure benchmark builds on the same construction the paper uses
+(Sec. V): N clients, 3 classes each (non-i.i.d.), synthetic FMNIST/CIFAR
+stand-ins (offline container — see DESIGN.md), RL with E=600, M=90.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.qlearning import RLConfig, uniform_graph
+from repro.data import partition_by_classes
+from repro.data.synthetic import cifar_like_split, fmnist_like_split
+from repro.models.autoencoder import AEConfig
+
+OUT_DIR = "runs/bench"
+
+AE_FM = AEConfig(28, 28, 1, widths=(8, 16), latent_dim=32)
+AE_CF = AEConfig(32, 32, 3, widths=(8, 16), latent_dim=32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchConfig:
+    n_clients: int = 10
+    n_per_class: int = 120
+    classes_per_client: int = 3
+    circular: bool = True
+    fl_iters: int = 300
+    tau_a: int = 10
+    eval_every: int = 50
+    batch_size: int = 32
+    rl_episodes: int = 600     # paper Sec. V
+    rl_buffer: int = 90        # paper Sec. V
+    seed: int = 0
+
+    @classmethod
+    def full(cls):
+        """Paper-scale settings (Sec. V): 30 clients, 1500 iterations."""
+        return cls(n_clients=30, n_per_class=300, fl_iters=1500,
+                   eval_every=100)
+
+
+def make_world(bc: BenchConfig, dataset: str = "fmnist"):
+    # NB: the eval split MUST share class prototypes with the train split
+    # (fmnist_like_split), otherwise eval measures generic reconstruction
+    # and every method looks identical.
+    key = jax.random.PRNGKey(bc.seed)
+    if dataset == "fmnist":
+        ds, ev = fmnist_like_split(key, n_train_per_class=bc.n_per_class,
+                                   n_eval_per_class=30)
+        ae_cfg = AE_FM
+    else:
+        ds, ev = cifar_like_split(key, n_train_per_class=bc.n_per_class,
+                                  n_eval_per_class=30)
+        ae_cfg = AE_CF
+    xs, ys, doms = partition_by_classes(
+        bc.seed, ds.images, ds.labels, n_clients=bc.n_clients,
+        classes_per_client=bc.classes_per_client, circular=bc.circular)
+    return key, xs, ys, ev, ae_cfg
+
+
+def pipeline_cfg(bc: BenchConfig) -> PipelineConfig:
+    return PipelineConfig(
+        rl=RLConfig(n_episodes=bc.rl_episodes, buffer_size=bc.rl_buffer))
+
+
+def three_way_datasets(bc: BenchConfig, dataset: str = "fmnist"):
+    """(non-iid, uniform-exchange, smart-exchange) client datasets + meta."""
+    key, xs, ys, ev, ae_cfg = make_world(bc, dataset)
+    pcfg = pipeline_cfg(bc)
+    smart = run_pipeline(key, xs, ys, ae_cfg, pcfg)
+    uni_edges = uniform_graph(jax.random.fold_in(key, 7), bc.n_clients)
+    uni = run_pipeline(key, xs, ys, ae_cfg, pcfg, in_edge=uni_edges)
+    return {
+        "key": key, "eval": ev, "ae_cfg": ae_cfg,
+        "noniid": (xs, ys),
+        "uniform": (uni.datasets, uni.labels),
+        "smart": (smart.datasets, smart.labels),
+        "smart_result": smart, "uniform_result": uni,
+    }
+
+
+def save_json(name: str, payload: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=_np_default)
+
+
+def _np_default(o):
+    if isinstance(o, (np.ndarray, jnp.ndarray)):
+        return np.asarray(o).tolist()
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    return str(o)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.time() - self.t0

@@ -1,0 +1,64 @@
+"""Aggregate runs/dryrun/*.json into the §Dry-run record (markdown)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES
+
+
+def load(path="runs/dryrun"):
+    recs = {}
+    for f in glob.glob(os.path.join(path, "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def _gb(x):
+    return f"{x / 1e9:.2f}"
+
+
+def markdown(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | status | HLO GFLOP/dev | args GB/dev | "
+        "temp GB/dev | collective GB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                r = recs.get((arch, shape, mesh))
+                if not r:
+                    continue
+                if r["status"] != "ok":
+                    lines.append(f"| {arch} | {shape} | {mesh} | FAIL | | | | | |")
+                    continue
+                mem = r.get("memory", {})
+                coll = sum(r.get("collectives", {}).values())
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | "
+                    f"{r['cost'].get('flops', 0) / 1e9:.1f} | "
+                    f"{_gb(mem.get('argument_size_in_bytes', 0))} | "
+                    f"{_gb(mem.get('temp_size_in_bytes', 0))} | "
+                    f"{_gb(coll)} | {r.get('compile_s', 0):.1f} |")
+    return "\n".join(lines)
+
+
+def summary(recs) -> dict:
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    return {"total": len(recs), "ok": ok, "fail": len(recs) - ok}
+
+
+def main(quick=True):
+    recs = load()
+    s = summary(recs)
+    print(f"dryrun_table,0,combos={s['total']};ok={s['ok']};fail={s['fail']}")
+
+
+if __name__ == "__main__":
+    recs = load()
+    print(markdown(recs))
+    print()
+    print(summary(recs))

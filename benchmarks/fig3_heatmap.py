@@ -1,0 +1,42 @@
+"""Paper Fig. 3: dissimilarity heatmaps (lambda_ij) before/after D2D.
+
+Setup: 10 devices, client i's label domain {i-1, i, i+1} (circular).
+Claim C1: mean lambda drops after exchange (paper: 6.24 -> 5.61)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def run(bc: C.BenchConfig | None = None, dataset: str = "fmnist"):
+    bc = bc or C.BenchConfig()
+    from repro.core.pipeline import run_pipeline
+    key, xs, ys, ev, ae_cfg = C.make_world(bc, dataset)
+    res = run_pipeline(key, xs, ys, ae_cfg, C.pipeline_cfg(bc))
+    lam_b = np.asarray(res.lam_before, np.float64)
+    lam_a = np.asarray(res.lam_after, np.float64)
+    off = ~np.eye(bc.n_clients, dtype=bool)
+    payload = {
+        "lam_before": lam_b, "lam_after": lam_a,
+        "mean_before": lam_b[off].mean(), "mean_after": lam_a[off].mean(),
+        "moved_counts": np.asarray(res.moved_counts),
+        "paper_reference": {"mean_before": 6.24, "mean_after": 5.61,
+                            "note": "paper used real FMNIST; we compare the "
+                                    "direction of the change, not the value"},
+    }
+    C.save_json(f"fig3_heatmap_{dataset}", payload)
+    return payload
+
+
+def main(quick=True):
+    with C.Timer() as t:
+        p = run()
+    derived = (f"mean_lambda_before={p['mean_before']:.3f};"
+               f"after={p['mean_after']:.3f};"
+               f"drop={'yes' if p['mean_after'] < p['mean_before'] else 'NO'}")
+    print(f"fig3_heatmap,{t.elapsed*1e6:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

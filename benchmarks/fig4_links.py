@@ -1,0 +1,49 @@
+"""Paper Fig. 4: probability of failed transmission of formed links,
+RL vs uniform graphs, on both datasets.  Claim C2."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.pipeline import run_pipeline
+from repro.core.qlearning import uniform_graph
+
+
+def run(bc: C.BenchConfig | None = None, dataset: str = "fmnist"):
+    bc = bc or C.BenchConfig()
+    key, xs, ys, ev, ae_cfg = C.make_world(bc, dataset)
+    res = run_pipeline(key, xs, ys, ae_cfg, C.pipeline_cfg(bc))
+    n = bc.n_clients
+    pf = np.asarray(res.p_fail)
+    rl_pd = pf[np.arange(n), np.asarray(res.in_edge)]
+    # 50 uniform graphs for a stable baseline distribution
+    uni_pd = []
+    for i in range(50):
+        g = np.asarray(uniform_graph(jax.random.fold_in(key, 1000 + i), n))
+        uni_pd.append(pf[np.arange(n), g])
+    uni_pd = np.stack(uni_pd)
+    payload = {
+        "rl_per_link": rl_pd, "rl_mean": rl_pd.mean(),
+        "uniform_mean": uni_pd.mean(), "uniform_std": uni_pd.mean(1).std(),
+        "improvement_x": float(uni_pd.mean() / max(rl_pd.mean(), 1e-12)),
+    }
+    C.save_json(f"fig4_links_{dataset}", payload)
+    return payload
+
+
+def main(quick=True):
+    rows = []
+    for ds in (("fmnist",) if quick else ("fmnist", "cifar")):
+        with C.Timer() as t:
+            p = run(dataset=ds)
+        rows.append((ds, t.elapsed, p))
+    for ds, el, p in rows:
+        derived = (f"dataset={ds};rl_mean_pd={p['rl_mean']:.4f};"
+                   f"uniform_mean_pd={p['uniform_mean']:.4f};"
+                   f"improvement={p['improvement_x']:.2f}x")
+        print(f"fig4_links,{el*1e6:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

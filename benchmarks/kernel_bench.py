@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: oracle path wall time on this host (CPU) plus the
+kernel's structural properties (VMEM tile footprint) for the TPU target.
+
+No TPU in the container — wall time for the Pallas path would measure the
+interpreter, so we report the jnp-oracle time (the CPU production path) and
+the kernel's static VMEM budget per grid step."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _timeit(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def main(quick=True):
+    key = jax.random.PRNGKey(0)
+    # kmeans assignment: the paper's Lloyd-iteration hot spot
+    n, d, k = (20000, 128, 10)
+    x = jax.random.normal(key, (n, d))
+    c = jax.random.normal(jax.random.fold_in(key, 1), (k, d))
+    f = jax.jit(ref.kmeans_assign_ref)
+    us = _timeit(f, x, c) * 1e6
+    vmem_kib = (512 * d + k * d + 512 * k) * 4 / 1024
+    print(f"kernel_kmeans_assign,{us:.0f},n={n};d={d};k={k};"
+          f"vmem_per_step_kib={vmem_kib:.0f}")
+
+    # flash attention oracle at a serving-ish shape
+    b, s, h, kv, hd = 1, 1024, 8, 2, 64
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    vv = jax.random.normal(jax.random.fold_in(key, 3), (b, s, kv, hd))
+    g = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    us = _timeit(g, q, kk, vv) * 1e6
+    vmem_kib = (512 * hd * 3 + 512 * 512 + 512 * (hd + 2)) * 4 / 1024
+    print(f"kernel_flash_attention,{us:.0f},b={b};s={s};h={h};kv={kv};"
+          f"hd={hd};vmem_per_step_kib={vmem_kib:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Assemble EXPERIMENTS.md tables from runs/ artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+
+Replaces the <!-- DRYRUN_TABLE --> / <!-- ROOFLINE_TABLE --> /
+<!-- REPRO_RESULTS --> markers (idempotent: markers are kept)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from benchmarks import dryrun_table, roofline_table
+
+
+def repro_results() -> str:
+    out = []
+    bench = {}
+    for f in glob.glob("runs/bench/*.json"):
+        bench[os.path.basename(f)[:-5]] = json.load(open(f))
+
+    f3 = bench.get("fig3_heatmap_fmnist")
+    if f3:
+        ok = f3["mean_after"] < f3["mean_before"]
+        out.append(
+            f"**C1 (Fig. 3, dissimilarity drops after D2D)** — "
+            f"mean lambda {f3['mean_before']:.3f} -> {f3['mean_after']:.3f} "
+            f"({'CONFIRMED' if ok else 'NOT confirmed'}; paper: 6.24 -> 5.61 "
+            f"on real FMNIST with its own k/beta scale — direction is the "
+            f"claim).  Datapoints moved per client: {f3['moved_counts']}.")
+    f4 = bench.get("fig4_links_fmnist")
+    if f4:
+        ok = f4["rl_mean"] < f4["uniform_mean"]
+        out.append(
+            f"**C2 (Fig. 4, RL links fail less)** — mean P_D of RL links "
+            f"{f4['rl_mean']:.4f} vs uniform {f4['uniform_mean']:.4f} "
+            f"({f4['improvement_x']:.2f}x better; "
+            f"{'CONFIRMED' if ok else 'NOT confirmed'}).")
+    f5 = bench.get("fig5_convergence_fmnist")
+    if f5:
+        lines = ["**C3+C4 (Fig. 5, convergence + linear eval)** — final "
+                 "reconstruction loss (lower=better) and few-shot probe "
+                 "accuracy:", "",
+                 "| scheme | smart (RL) | uniform | non-iid | ordering ok |",
+                 "|---|---|---|---|---|"]
+        for scheme in ("fedavg", "fedsgd", "fedprox"):
+            fs = {m: f5["curves"][f"{scheme}/{m}"][-1]
+                  for m in ("smart", "uniform", "noniid")}
+            ls = {m: f5["linear_eval"][f"{scheme}/{m}"]
+                  for m in ("smart", "uniform", "noniid")}
+            ok = fs["smart"] <= fs["uniform"] * 1.02 and \
+                fs["smart"] <= fs["noniid"] * 1.02
+            lines.append(
+                f"| {scheme} | {fs['smart']:.5f} / {ls['smart']:.2f} | "
+                f"{fs['uniform']:.5f} / {ls['uniform']:.2f} | "
+                f"{fs['noniid']:.5f} / {ls['noniid']:.2f} | "
+                f"{'yes' if ok else 'NO'} |")
+        out.append("\n".join(lines))
+    f6 = bench.get("fig6_stragglers_fmnist")
+    if f6:
+        worst = max(f6["straggler_counts"])
+        fl = f6["final_loss"]
+        best = fl[f"{worst}/smart"] <= min(fl[f"{worst}/uniform"],
+                                           fl[f"{worst}/noniid"]) * 1.02
+        out.append(
+            f"**C5 (Fig. 6, straggler robustness)** — final loss with "
+            f"{worst} stragglers: smart {fl[f'{worst}/smart']:.5f}, uniform "
+            f"{fl[f'{worst}/uniform']:.5f}, non-iid "
+            f"{fl[f'{worst}/noniid']:.5f} "
+            f"({'CONFIRMED' if best else 'NOT confirmed'}).")
+    if not out:
+        return "(no bench records yet — run `python -m benchmarks.run`)"
+    return "\n\n".join(out)
+
+
+def inject(md: str, marker: str, content: str) -> str:
+    pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.S)
+    block = f"<!-- {marker} -->\n\n{content}\n"
+    if pat.search(md):
+        return pat.sub(lambda m: block, md)
+    return md + "\n" + block
+
+
+def main():
+    md = open("EXPERIMENTS.md").read()
+    md = inject(md, "REPRO_RESULTS", repro_results())
+    recs = dryrun_table.load()
+    s = dryrun_table.summary(recs)
+    dr = (f"Result: **{s['ok']}/{s['total']} combos compile** "
+          f"({s['fail']} failures).\n\n" + dryrun_table.markdown(recs))
+    md = inject(md, "DRYRUN_TABLE", dr)
+    rl = roofline_table.markdown_table(roofline_table.load_all())
+    md = inject(md, "ROOFLINE_TABLE", rl)
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

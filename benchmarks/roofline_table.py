@@ -1,0 +1,55 @@
+"""Emit the §Roofline table from runs/roofline/*.json (see launch/dryrun.py
+--roofline) as markdown + CSV lines."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES
+
+COLS = ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+        "useful_flops_ratio")
+
+
+def load_all(path="runs/roofline"):
+    recs = {}
+    for f in glob.glob(os.path.join(path, "*.json")):
+        r = json.load(open(f))
+        if r.get("status") == "ok" and "roofline" in r:
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def markdown_table(recs) -> str:
+    lines = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+             "bottleneck | useful/HLO |",
+             "|---|---|---|---|---|---|---|"]
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            r = recs.get((arch, shape))
+            if not r:
+                continue
+            rf = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {rf['t_compute_s']:.3g} | "
+                f"{rf['t_memory_s']:.3g} | {rf['t_collective_s']:.3g} | "
+                f"{rf['bottleneck']} | {rf['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main(quick=True):
+    recs = load_all()
+    for (arch, shape), r in sorted(recs.items()):
+        rf = r["roofline"]
+        dom = max(("compute", "memory", "collective"),
+                  key=lambda k: rf[f"t_{k}_s"])
+        print(f"roofline,{rf[f't_{dom}_s']*1e6:.0f},arch={arch};shape={shape};"
+              f"bottleneck={dom};t_comp={rf['t_compute_s']:.3g};"
+              f"t_mem={rf['t_memory_s']:.3g};t_coll={rf['t_collective_s']:.3g}")
+    if not recs:
+        print("roofline,0,no_records_found_run_dryrun_with_--roofline_first")
+
+
+if __name__ == "__main__":
+    main()

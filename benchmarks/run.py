@@ -1,0 +1,48 @@
+"""Benchmark harness: one entry per paper table/figure + kernel micro-bench +
+the roofline table.  Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5]
+
+--full uses the paper-scale settings (30 clients, 1500 iterations); the
+default quick settings preserve every claim's *ordering* at ~10x less CPU.
+"""
+import argparse
+import sys
+import traceback
+
+from benchmarks import (beyond_paper, dryrun_table, fig3_heatmap, fig4_links,
+                        fig5_convergence, fig6_stragglers, kernel_bench,
+                        roofline_table)
+
+BENCHES = {
+    "fig3": fig3_heatmap.main,
+    "fig4": fig4_links.main,
+    "fig5": fig5_convergence.main,
+    "fig6": fig6_stragglers.main,
+    "kernels": kernel_bench.main,
+    "roofline": roofline_table.main,
+    "dryrun": dryrun_table.main,
+    "beyond": beyond_paper.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in names:
+        try:
+            BENCHES[name](quick=not args.full)
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},0,FAILED")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Pytree checkpointing: flat npz with '/'-joined key paths.
+
+Host-gathered (suitable for the CPU container and single-host TPU runs; a
+real multi-pod deployment would swap in per-shard async writes behind the
+same two functions — the call sites wouldn't change).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _nativize(arr: np.ndarray) -> np.ndarray:
+    """npz can't store ml_dtypes (bfloat16, fp8); widen to float32 — load
+    casts back to the reference dtype, losslessly for bf16->f32->bf16."""
+    if arr.dtype.kind not in "biufc":
+        return arr.astype(np.float32)
+    return arr
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_key_str(p): _nativize(np.asarray(v)) for p, v in flat}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        vals = []
+        for p, ref in flat:
+            arr = data[_key_str(p)]
+            assert arr.shape == ref.shape, (p, arr.shape, ref.shape)
+            vals.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+        return jax.tree_util.tree_unflatten(treedef, [v for v in vals])

@@ -1,0 +1,20 @@
+"""Llama-3-8B [arXiv:2407.21783]. Dense GQA, 128k vocab."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=500_000.0,
+    source="arXiv:2407.21783",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced()

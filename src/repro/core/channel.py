@@ -1,0 +1,54 @@
+"""D2D channel model (paper Sec. II-C).
+
+P_D(i,j) = 1 - exp( -(2^r - 1) * sigma^2 / W_ij )
+
+where W_ij is the received signal strength (RSS) at c_i from c_j, sigma^2 the
+(shared) noise power and r the constant transmission rate.  We synthesise W
+from random device positions with a log-distance path-loss model — the paper
+takes W as given; any positive matrix works.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    rate: float = 1.0          # r, bits/s/Hz
+    noise_power: float = 0.05  # sigma^2
+    tx_power: float = 1.0
+    pathloss_exp: float = 2.5
+    area: float = 1.0          # devices placed uniformly in [0, area]^2
+    min_dist: float = 0.05
+
+
+def make_positions(key, n: int, cfg: ChannelConfig = ChannelConfig()):
+    return jax.random.uniform(key, (n, 2), minval=0.0, maxval=cfg.area)
+
+
+def rss_from_positions(key, pos, cfg: ChannelConfig = ChannelConfig()):
+    """W[i, j]: RSS at i receiving from j. Symmetric path loss, asymmetric
+    (per-link) Rayleigh-like fading."""
+    n = pos.shape[0]
+    d = jnp.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
+    d = jnp.maximum(d, cfg.min_dist)
+    pl = cfg.tx_power * d ** (-cfg.pathloss_exp)
+    fade = jax.random.exponential(key, (n, n)) * 0.5 + 0.75  # mild fading
+    w = pl * fade
+    return w.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+
+
+def make_rss(key, n: int, cfg: ChannelConfig = ChannelConfig()):
+    kp, kf = jax.random.split(key)
+    return rss_from_positions(kf, make_positions(kp, n, cfg), cfg)
+
+
+def failure_prob(w, cfg: ChannelConfig = ChannelConfig()):
+    """P_D matrix from the RSS matrix (paper Sec. II-C)."""
+    snr_req = (2.0 ** cfg.rate - 1.0) * cfg.noise_power
+    p = 1.0 - jnp.exp(-snr_req / w)
+    n = w.shape[0]
+    return p.at[jnp.arange(n), jnp.arange(n)].set(1.0)  # no self links

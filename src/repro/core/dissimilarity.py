@@ -1,0 +1,48 @@
+"""Cross-client dataset dissimilarity lambda_ij (paper Sec. III).
+
+For receiver c_i (centroids v_i, k_i of them) and transmitter c_j
+(centroids v_j, clusters m = 1..k_j):
+
+  lambda_ij_m = #{ n : ||v_in - v_jm|| > beta }                 (distance)
+  lambda_ij   = sum_m 1[lambda_ij_m == k_i] * T_j[i, m]          (trust-gated)
+
+i.e. the number of c_j clusters that are far from *every* c_i cluster and
+that c_j trusts c_i with — the clusters c_i would gain diversity from.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lambda_pair(cents_i, cents_j, trust_col, beta: float):
+    """cents_i: (k_i, d), cents_j: (k_j, d), trust_col: (k_j,) in {0,1}."""
+    d = jnp.linalg.norm(cents_i[:, None, :] - cents_j[None, :, :], axis=-1)
+    far = (d > beta).all(axis=0)               # (k_j,): far from every v_in
+    return jnp.sum(far.astype(jnp.int32) * trust_col.astype(jnp.int32))
+
+
+def lambda_matrix(centroids, trust, beta: float):
+    """centroids: list of (k_i, d); trust: list of T_j (N, k_j).
+
+    Returns (N, N) int32 with lambda[i, j] (diagonal = 0)."""
+    n = len(centroids)
+    rows = []
+    for i in range(n):
+        row = []
+        for j in range(n):
+            if i == j:
+                row.append(jnp.zeros((), jnp.int32))
+            else:
+                row.append(lambda_pair(centroids[i], centroids[j],
+                                       trust[j][i], beta))
+        rows.append(jnp.stack(row))
+    return jnp.stack(rows)
+
+
+def median_heuristic_beta(centroids, scale: float = 1.0) -> float:
+    """A data-driven default for the distance threshold beta: the median of
+    all cross-client centroid distances, scaled."""
+    cents = jnp.concatenate(centroids, axis=0)
+    d = jnp.linalg.norm(cents[:, None] - cents[None, :], axis=-1)
+    iu = jnp.triu_indices(d.shape[0], 1)
+    return float(jnp.median(d[iu]) * scale)

@@ -1,0 +1,28 @@
+"""Unsupervised feature extractors feeding PCA+K-means (§Arch-applicability).
+
+The paper clusters raw pixels; token architectures have no pixels, so the
+equivalent unlabeled representation is the mean-pooled embedding of each
+sequence under the model's own (or a frozen random) embedding table.  This
+is what lets the same graph-discovery pipeline drive D2D exchange for LLM
+federated training (examples/federated_llm.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def token_sequence_features(tokens, embed_table):
+    """tokens: (n, S) int32; embed_table: (V, D) -> (n, D) mean-pooled."""
+    emb = jnp.take(embed_table, tokens, axis=0)     # (n, S, D)
+    return jnp.mean(emb, axis=1)
+
+
+def random_embed_table(key, vocab: int, dim: int = 64):
+    """Frozen random features — shared across clients without coordination
+    (all clients derive it from the same public seed)."""
+    return jax.random.normal(key, (vocab, dim)) / jnp.sqrt(dim)
+
+
+def image_features(images):
+    """Flatten images (the paper's raw-pixel features before PCA)."""
+    return images.reshape(images.shape[0], -1)

@@ -1,0 +1,83 @@
+"""K-means++ (paper Sec. III): careful seeding + Lloyd iterations.
+
+The assignment step (pairwise distance + argmin, the per-iteration hot spot)
+routes through ``repro.kernels.ops.kmeans_assign`` — the Pallas TPU kernel
+with a pure-jnp oracle fallback on CPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array    # (k, d)
+    assignments: jax.Array  # (n,) int32
+    inertia: jax.Array      # () sum of squared distances to assigned centroid
+
+
+def kmeans_plus_plus_init(key, x, k: int):
+    """k-means++ seeding [Arthur & Vassilvitskii 2007]."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    cents = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+    d2 = jnp.sum(jnp.square(x - cents[0]), axis=-1)
+
+    def body(i, carry):
+        cents, d2, key = carry
+        key, kc = jax.random.split(key)
+        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-12)
+        idx = jax.random.choice(kc, n, p=probs)
+        cents = cents.at[i].set(x[idx])
+        nd2 = jnp.sum(jnp.square(x - cents[i]), axis=-1)
+        return cents, jnp.minimum(d2, nd2), key
+
+    cents, _, _ = jax.lax.fori_loop(1, k, body, (cents, d2, key))
+    return cents
+
+
+def lloyd_step(x, centroids):
+    assign, min_d2 = kops.kmeans_assign(x, centroids)
+    k = centroids.shape[0]
+    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)        # (n, k)
+    counts = jnp.sum(onehot, axis=0)                          # (k,)
+    sums = onehot.T @ x                                       # (k, d)
+    new_c = jnp.where(counts[:, None] > 0,
+                      sums / jnp.maximum(counts[:, None], 1.0),
+                      centroids)
+    return new_c, assign, jnp.sum(min_d2)
+
+
+def kmeans(key, x, k: int, n_iters: int = 25) -> KMeansResult:
+    """Full K-means++ fit. x: (n, d)."""
+    cents = kmeans_plus_plus_init(key, x, k)
+
+    def body(_, carry):
+        cents, _, _ = carry
+        return lloyd_step(x, cents)
+
+    init = lloyd_step(x, cents)
+    cents, assign, inertia = jax.lax.fori_loop(1, n_iters, body, init)
+    return KMeansResult(cents, assign, inertia)
+
+
+def wcss_elbow(key, x, k_candidates) -> int:
+    """Elbow method over candidate k (Assumption 2 helper).
+
+    Kneedle-style criterion: normalise (k, WCSS) to the unit square and pick
+    the k with the maximum vertical distance below the chord from the first
+    to the last point — the 'hinge' of the WCSS curve."""
+    inertias = jnp.stack([kmeans(key, x, int(k)).inertia for k in k_candidates])
+    if len(k_candidates) < 3:
+        return int(k_candidates[int(jnp.argmin(inertias))])
+    ks = jnp.asarray(k_candidates, jnp.float32)
+    kx = (ks - ks[0]) / (ks[-1] - ks[0])
+    iy = (inertias - inertias[-1]) / jnp.maximum(inertias[0] - inertias[-1],
+                                                 1e-12)
+    chord = 1.0 - kx                  # straight line from (0,1) to (1,0)
+    return int(k_candidates[int(jnp.argmax(chord - iy))])

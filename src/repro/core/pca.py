@@ -1,0 +1,53 @@
+"""PCA (paper Sec. III): dimensionality reduction before K-means++.
+
+Two fits:
+  * :func:`fit_pca` — single dataset (covariance + eigh).
+  * :func:`fit_pca_federated` — the FL-compatible variant used by the
+    pipeline: clients share only their first/second moment sufficient
+    statistics (sum x, sum x x^T, n); the *shared* basis makes centroids of
+    different clients live in one space, which the paper's lambda_ij
+    comparison implicitly requires.  No raw datapoint leaves a device,
+    consistent with the paper's privacy constraints.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class PCA(NamedTuple):
+    mean: jax.Array         # (d,)
+    components: jax.Array   # (d, k) orthonormal columns
+    explained_var: jax.Array  # (k,)
+
+    def transform(self, x):
+        return (x - self.mean) @ self.components
+
+    def inverse(self, z):
+        return z @ self.components.T + self.mean
+
+
+def _pca_from_moments(s1, s2, n, n_components: int) -> PCA:
+    mean = s1 / n
+    cov = s2 / n - jnp.outer(mean, mean)
+    evals, evecs = jnp.linalg.eigh(cov)          # ascending
+    idx = jnp.argsort(evals)[::-1][:n_components]
+    return PCA(mean, evecs[:, idx], evals[idx])
+
+
+def fit_pca(x, n_components: int) -> PCA:
+    """x: (n, d) flat features."""
+    n = x.shape[0]
+    s1 = jnp.sum(x, axis=0)
+    s2 = x.T @ x
+    return _pca_from_moments(s1, s2, n, n_components)
+
+
+def fit_pca_federated(xs: Sequence[jax.Array], n_components: int) -> PCA:
+    """Aggregate per-client sufficient statistics into one shared basis."""
+    s1 = sum(jnp.sum(x, axis=0) for x in xs)
+    s2 = sum(x.T @ x for x in xs)
+    n = sum(x.shape[0] for x in xs)
+    return _pca_from_moments(s1, s2, n, n_components)

@@ -1,0 +1,105 @@
+"""End-to-end smart-exchange pipeline (paper Algorithms 1 + 2 wiring).
+
+    PCA (federated basis) -> K-means++ per client -> trust + channel ->
+    lambda matrix -> rewards -> RL graph discovery -> AE-gated exchange.
+
+Returns everything the benchmarks need (heatmaps, link stats, new datasets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+from repro.core import dissimilarity as ds
+from repro.core import exchange as ex
+from repro.core import kmeans as km
+from repro.core import pca as pca_lib
+from repro.core import qlearning as ql
+from repro.core import rewards as rw
+from repro.core import trust as tr
+from repro.models.autoencoder import AEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_pca: int = 32
+    n_clusters: int = 3            # k_i (paper: 3 classes per device)
+    kmeans_iters: int = 25
+    beta: Optional[float] = None   # None -> median heuristic
+    beta_scale: float = 0.8
+    p_trust: float = 0.9
+    reward: rw.RewardConfig = dataclasses.field(default_factory=rw.RewardConfig)
+    rl: ql.RLConfig = dataclasses.field(default_factory=ql.RLConfig)
+    channel: ch.ChannelConfig = dataclasses.field(default_factory=ch.ChannelConfig)
+    exchange: ex.ExchangeConfig = dataclasses.field(default_factory=ex.ExchangeConfig)
+
+
+class PipelineResult(NamedTuple):
+    datasets: list
+    labels: list
+    in_edge: jax.Array
+    lam_before: jax.Array
+    lam_after: jax.Array
+    p_fail: jax.Array
+    graph: ql.GraphResult
+    moved_counts: object
+    centroids: list
+
+
+def _flatten(x):
+    return x.reshape(x.shape[0], -1)
+
+
+def cluster_clients(key, datasets, cfg: PipelineConfig):
+    """Shared-basis PCA + per-client K-means++. Returns (centroids, assigns)."""
+    flats = [_flatten(jnp.asarray(d)) for d in datasets]
+    pca = pca_lib.fit_pca_federated(flats, cfg.n_pca)
+    cents, assigns = [], []
+    keys = jax.random.split(key, len(datasets))
+    for kk, f in zip(keys, flats):
+        z = pca.transform(f)
+        res = km.kmeans(kk, z, cfg.n_clusters, cfg.kmeans_iters)
+        cents.append(res.centroids)
+        assigns.append(res.assignments)
+    return pca, cents, assigns
+
+
+def run_pipeline(key, datasets, labels, ae_cfg: AEConfig,
+                 cfg: PipelineConfig = PipelineConfig(),
+                 in_edge=None) -> PipelineResult:
+    """Full smart-exchange. Pass ``in_edge`` to skip RL (e.g. uniform
+    baseline graphs) while keeping the same exchange machinery."""
+    k_cl, k_tr, k_ch, k_rl, k_ex = jax.random.split(key, 5)
+    n = len(datasets)
+
+    pca, cents, assigns = cluster_clients(k_cl, datasets, cfg)
+    trust = tr.make_trust(k_tr, n, cfg.n_clusters, cfg.p_trust)
+    rss = ch.make_rss(k_ch, n, cfg.channel)
+    p_fail = ch.failure_prob(rss, cfg.channel)
+
+    beta = cfg.beta if cfg.beta is not None else \
+        ds.median_heuristic_beta(cents, cfg.beta_scale)
+    lam_before = ds.lambda_matrix(cents, trust, beta)
+    local_r = rw.local_reward_matrix(lam_before, p_fail, cfg.reward)
+
+    if in_edge is None:
+        graph = ql.discover_graph(k_rl, local_r, p_fail, cfg.rl)
+        in_edge = graph.in_edge
+    else:
+        in_edge = jnp.asarray(in_edge)
+        graph = ql.GraphResult(in_edge, jnp.zeros((n, n)),
+                               jnp.zeros((0,)), jnp.zeros((0,)))
+
+    res = ex.run_exchange(k_ex, datasets, labels, assigns, trust, in_edge,
+                          p_fail, ae_cfg, cfg.exchange)
+
+    # Recompute dissimilarity on the post-exchange datasets (paper Fig. 3).
+    _, cents_after, _ = cluster_clients(k_cl, res.datasets, cfg)
+    lam_after = ds.lambda_matrix(cents_after, trust, beta)
+
+    return PipelineResult(res.datasets, res.labels, in_edge, lam_before,
+                          lam_after, p_fail, graph, res.moved_counts, cents)

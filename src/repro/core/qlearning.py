@@ -1,0 +1,179 @@
+"""Decentralized multi-agent Q-learning for D2D graph discovery
+(paper Sec. III + Algorithm 1).
+
+Each client is an agent choosing its *incoming* edge (Assumption 3: exactly
+one).  The whole loop is a `lax.scan` over episodes with all N agents
+vectorised — decentralisation is preserved semantically (each agent reads
+only its own Q row; the only shared quantities are the episode-mean reward
+and r_net, which the paper explicitly lets devices exchange).
+
+Deviation note: Eq. 4 normalises raw Q values, which is ill-defined once
+rewards (hence Q) can be negative (r_ij = a1*lam - a2*P_D can be < 0).  We
+use a shifted normalisation Q~ = Q - min(Q) + eps per row, which equals the
+paper's expression whenever Q >= 0 elementwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rewards as rw
+
+
+@dataclasses.dataclass(frozen=True)
+class RLConfig:
+    n_episodes: int = 600      # E (paper Sec. V)
+    buffer_size: int = 90      # M (paper Sec. V)
+    q_init: float = 0.1        # "small equal values"
+    gamma0: float = 0.3        # exploration->exploitation anneal (gamma at t=0)
+    gamma_step: float = 0.15   # increase per buffer flush
+    gamma_max: float = 0.95
+    # Beyond-paper exploration policy (benchmarks/beyond_paper.py):
+    #   "mixed" — the paper's Eq. 4 (gamma-mixed normalised Q + uniform)
+    #   "ucb"   — per-agent UCB1 over incoming edges; deterministic argmax
+    #             of q_mean + c*sqrt(ln(e+1)/(n+1)), typically converging in
+    #             far fewer episodes than the annealed mixed policy.
+    policy: str = "mixed"
+    ucb_c: float = 1.5
+
+
+class RLState(NamedTuple):
+    q: jax.Array            # (N, N)
+    counts: jax.Array       # (N, N) per-action pick counts (UCB)
+    buf_actions: jax.Array  # (N, M) int32
+    buf_rewards: jax.Array  # (N, M) global rewards (Eq. 3)
+    buf_local: jax.Array    # (N, M) local rewards (for Eq. 5)
+    r_net_prev: jax.Array   # ()
+    t: jax.Array            # () number of buffer flushes so far
+
+
+class GraphResult(NamedTuple):
+    in_edge: jax.Array        # (N,) transmitter chosen by each receiver (Eq. 7)
+    q: jax.Array              # (N, N) final Q-table
+    ep_mean_local: jax.Array  # (E,) mean local reward per episode
+    ep_mean_pfail: jax.Array  # (E,) mean P_D of chosen links per episode
+
+
+def _gamma(t, cfg: RLConfig):
+    return jnp.minimum(cfg.gamma0 + cfg.gamma_step * t.astype(jnp.float32),
+                       cfg.gamma_max)
+
+
+def policy_probs(q, gamma, u):
+    """Eq. 4 with shifted normalisation; self-links masked.
+
+    q: (N, N), u: (N, N) uniform noise."""
+    n = q.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    qs = jnp.where(eye, jnp.inf, q)
+    qmin = jnp.min(qs, axis=1, keepdims=True)
+    q_shift = jnp.where(eye, 0.0, q - qmin + 1e-6)
+    q_norm = q_shift / jnp.sum(q_shift, axis=1, keepdims=True)
+    mixed = gamma * q_norm + (1.0 - gamma) * u
+    mixed = jnp.where(eye, 0.0, mixed)
+    return mixed / jnp.sum(mixed, axis=1, keepdims=True)
+
+
+def ucb_actions(q, counts, episode, c):
+    """UCB1 over incoming edges (beyond-paper variant): value estimate is
+    the running mean reward per action; unexplored actions are infinite."""
+    n = q.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    mean = q / jnp.maximum(counts, 1.0)
+    bonus = c * jnp.sqrt(jnp.log(episode.astype(jnp.float32) + 2.0)
+                         / jnp.maximum(counts, 1e-9))
+    score = jnp.where(counts > 0, mean + bonus, jnp.inf)
+    score = jnp.where(eye, -jnp.inf, score)
+    return jnp.argmax(score, axis=1)
+
+
+def _q_update(q, buf_actions, buf_rewards):
+    """Eq. 6: Q_i(a) += mean of buffered global rewards with action a."""
+    n = q.shape[1]  # number of actions
+    onehot = jax.nn.one_hot(buf_actions, n, dtype=jnp.float32)   # (N,M,A)
+    sums = jnp.einsum("nma,nm->na", onehot, buf_rewards)
+    counts = jnp.sum(onehot, axis=1)                             # (N,A)
+    means = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), 0.0)
+    return q + means
+
+
+def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig()) -> GraphResult:
+    """Run Algorithm 1.
+
+    local_r: (N, N) precomputed r_ij (Eq. 2; stationary in the paper's
+    setting since lambda and P_D are fixed during discovery).
+    p_fail: (N, N) P_D for diagnostics.
+    """
+    n = local_r.shape[0]
+    m = cfg.buffer_size
+    state = RLState(
+        q=jnp.full((n, n), cfg.q_init),
+        counts=jnp.zeros((n, n)),
+        buf_actions=jnp.zeros((n, m), jnp.int32),
+        buf_rewards=jnp.zeros((n, m)),
+        buf_local=jnp.zeros((n, m)),
+        r_net_prev=jnp.zeros(()),
+        t=jnp.zeros((), jnp.int32),
+    )
+    use_ucb = cfg.policy == "ucb"
+
+    def episode(state: RLState, inp):
+        e, key = inp
+        ku, ks = jax.random.split(key)
+        gamma = _gamma(state.t, cfg)
+        if use_ucb:
+            actions = ucb_actions(state.q, state.counts, e, cfg.ucb_c)
+        else:
+            u = jax.random.uniform(ku, (n, n))
+            probs = policy_probs(state.q, gamma, u)
+            actions = jax.random.categorical(ks, jnp.log(probs + 1e-12),
+                                             axis=1)
+        r_loc = local_r[jnp.arange(n), actions]                  # (N,)
+        r_glob = rw.global_rewards(r_loc, gamma, state.r_net_prev)
+        counts = state.counts.at[jnp.arange(n), actions].add(1.0)
+        slot = e % m
+        buf_a = state.buf_actions.at[:, slot].set(actions)
+        buf_r = state.buf_rewards.at[:, slot].set(r_glob)
+        buf_l = state.buf_local.at[:, slot].set(r_loc)
+
+        if use_ucb:
+            # UCB maintains running reward sums directly (no buffer flush)
+            q = state.q.at[jnp.arange(n), actions].add(r_glob)
+            state = RLState(q, counts, buf_a, buf_r, buf_l,
+                            state.r_net_prev, state.t)
+        else:
+            def flush(_):
+                r_net = rw.network_performance(buf_a, buf_l, n)
+                q = _q_update(state.q, buf_a, buf_r)
+                return RLState(q, counts, buf_a, buf_r, buf_l, r_net,
+                               state.t + 1)
+
+            def keep(_):
+                return RLState(state.q, counts, buf_a, buf_r, buf_l,
+                               state.r_net_prev, state.t)
+
+            state = jax.lax.cond(slot == m - 1, flush, keep, None)
+        diag = (jnp.mean(r_loc), jnp.mean(p_fail[jnp.arange(n), actions]))
+        return state, diag
+
+    keys = jax.random.split(key, cfg.n_episodes)
+    state, (ep_r, ep_p) = jax.lax.scan(
+        episode, state, (jnp.arange(cfg.n_episodes), keys))
+
+    # Eq. 7: final links = argmax accumulated reward (self masked).
+    # UCB: argmax of the running MEAN (sums are count-biased).
+    qf = state.q / jnp.maximum(state.counts, 1.0) if use_ucb else state.q
+    qf = qf.at[jnp.arange(n), jnp.arange(n)].set(-jnp.inf)
+    qf = jnp.where(use_ucb & (state.counts == 0), -jnp.inf, qf) \
+        if use_ucb else qf
+    in_edge = jnp.argmax(qf, axis=1)
+    return GraphResult(in_edge, state.q, ep_r, ep_p)
+
+
+def uniform_graph(key, n: int) -> jax.Array:
+    """Baseline: each receiver picks a transmitter uniformly at random."""
+    offs = jax.random.randint(key, (n,), 1, n)
+    return (jnp.arange(n) + offs) % n

@@ -1,0 +1,56 @@
+"""Reward formulation (paper Eqs. 2, 3, 5)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RewardConfig:
+    alpha1: float = 1.0    # weight on dataset dissimilarity lambda_ij
+    alpha2: float = 2.0    # weight on failed-transmission probability
+    # Beyond-paper variant (benchmarks/beyond_paper.py): "expected" scores a
+    # link by its *expected delivered diversity* a1*lam*(1-P_D) - a2*P_D —
+    # a high-diversity link that usually fails stops looking attractive,
+    # which the paper's additive form (Eq. 2) cannot express.
+    kind: str = "paper"    # "paper" (Eq. 2) | "expected"
+
+
+def local_reward_matrix(lam, p_fail, cfg: RewardConfig = RewardConfig()):
+    """Eq. 2 for all pairs: r[i, j] = a1 * lambda_ij - a2 * P_D(i, j)
+    (or the expected-delivery variant — see RewardConfig.kind).
+
+    Diagonal (self links) is -inf-ish so it is never preferred."""
+    lam = lam.astype(jnp.float32)
+    if cfg.kind == "expected":
+        r = cfg.alpha1 * lam * (1.0 - p_fail) - cfg.alpha2 * p_fail
+    else:
+        r = cfg.alpha1 * lam - cfg.alpha2 * p_fail
+    n = r.shape[0]
+    return r.at[jnp.arange(n), jnp.arange(n)].set(-1e9)
+
+
+def global_rewards(local_r, gamma, r_net_prev):
+    """Eq. 3, vectorised over agents.
+
+    local_r: (N,) this episode's local rewards r_{i, j_i}.
+    Returns (N,) R^e_{ij}."""
+    mean_r = jnp.mean(local_r)
+    return local_r + gamma * (mean_r - r_net_prev)
+
+
+def network_performance(buf_actions, buf_rewards_local, n_actions: int):
+    """Eq. 5: r_net^t = mean_k r_hat_k^f, where r_hat_k^f is the *local*
+    reward of agent k's most frequent buffered action.
+
+    buf_actions: (N, M) int32; buf_rewards_local: (N, M) local rewards at
+    the time each action was taken."""
+    import jax
+    onehot = jax.nn.one_hot(buf_actions, n_actions, dtype=jnp.float32)  # (N,M,A)
+    counts = jnp.sum(onehot, axis=1)                                    # (N,A)
+    freq_action = jnp.argmax(counts, axis=-1)                           # (N,)
+    match = buf_actions == freq_action[:, None]                         # (N,M)
+    sums = jnp.sum(buf_rewards_local * match, axis=1)
+    cnt = jnp.maximum(jnp.sum(match, axis=1), 1)
+    return jnp.mean(sums / cnt)

@@ -1,0 +1,32 @@
+"""Local trust matrices (paper Eq. 1).
+
+T_j in {0,1}^{N x k_j}: T_j[i, n] = 1 iff transmitter c_j trusts receiver c_i
+with its cluster n.  Trust is the device owner's policy; for simulations we
+synthesise it with a per-entry Bernoulli(p_trust), always trusting self.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_trust(key, n_clients: int, n_clusters, p_trust: float = 0.9):
+    """Returns a list of T_j arrays, T_j: (N, k_j) int8.
+
+    ``n_clusters`` may be an int (same k everywhere) or a sequence of k_j.
+    """
+    if isinstance(n_clusters, int):
+        n_clusters = [n_clusters] * n_clients
+    keys = jax.random.split(key, n_clients)
+    mats = []
+    for j, (kj, kk) in enumerate(zip(n_clusters, keys)):
+        t = (jax.random.uniform(kk, (n_clients, kj)) < p_trust).astype(jnp.int8)
+        t = t.at[j].set(1)  # trivially trusts itself
+        mats.append(t)
+    return mats
+
+
+def full_trust(n_clients: int, n_clusters) -> list:
+    if isinstance(n_clusters, int):
+        n_clusters = [n_clusters] * n_clients
+    return [jnp.ones((n_clients, k), jnp.int8) for k in n_clusters]

@@ -1,0 +1,87 @@
+"""Synthetic class-structured image datasets (offline FMNIST/CIFAR stand-ins).
+
+The container has no dataset downloads, so the paper's FashionMNIST /
+CIFAR-10 are replaced by generators with the same shapes and a controllable
+class structure: each class has a smooth low-frequency *prototype* image;
+samples are prototype + per-sample smooth deformation + pixel noise, clipped
+to [0, 1].  Classes are therefore linearly separable enough for PCA+K-means
+to recover them (like FMNIST) while still requiring the autoencoder to learn
+non-trivial structure.  All paper claims we validate are *relative orderings
+between methods on identical data*, which survive this substitution.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ImageDataset(NamedTuple):
+    images: jax.Array   # (n, H, W, C) in [0, 1]
+    labels: jax.Array   # (n,) int32
+
+
+def _smooth(key, n, h, w, c, grid=4):
+    low = jax.random.normal(key, (n, grid, grid, c))
+    return jax.image.resize(low, (n, h, w, c), method="bicubic")
+
+
+def make_image_dataset(key, *, n_classes=10, n_per_class=200, height=28,
+                       width=28, channels=1, proto_strength=2.5,
+                       proto_grid=12, deform=0.4, noise=0.08) -> ImageDataset:
+    """proto_grid controls prototype frequency content: a coarse grid (4)
+    gives smooth blobs any autoencoder reconstructs without seeing the
+    class; a fine grid (12+) gives class-specific texture that must be
+    *memorised* through the bottleneck — this is what makes reconstruction
+    loss depend on class coverage, the property the paper's FL experiments
+    rely on."""
+    kp, kd, kn, ks = jax.random.split(key, 4)
+    protos = _smooth(kp, n_classes, height, width, channels,
+                     grid=proto_grid) * proto_strength
+    n = n_classes * n_per_class
+    labels = jnp.repeat(jnp.arange(n_classes, dtype=jnp.int32), n_per_class)
+    deforms = _smooth(kd, n, height, width, channels, grid=6) * deform
+    pix = jax.random.normal(kn, (n, height, width, channels)) * noise
+    imgs = protos[labels] + deforms + pix
+    imgs = jax.nn.sigmoid(imgs)          # squash into (0, 1), keeps structure
+    perm = jax.random.permutation(ks, n)
+    return ImageDataset(imgs[perm], labels[perm])
+
+
+def make_split_dataset(key, *, n_train_per_class, n_eval_per_class,
+                       **kw) -> tuple[ImageDataset, ImageDataset]:
+    """Train/eval split drawn from the SAME class prototypes.
+
+    (Generating eval with a fresh key would create *new* prototypes —
+    classes no model has seen — and class-coverage effects would vanish;
+    this helper is the supported way to get an eval set.)"""
+    n = n_train_per_class + n_eval_per_class
+    ds = make_image_dataset(key, n_per_class=n, **kw)
+    cut = n_train_per_class * 10 if "n_classes" not in kw else \
+        n_train_per_class * kw["n_classes"]
+    # dataset is shuffled, so a prefix split is a uniform split
+    return (ImageDataset(ds.images[:cut], ds.labels[:cut]),
+            ImageDataset(ds.images[cut:], ds.labels[cut:]))
+
+
+def fmnist_like(key, n_per_class=200) -> ImageDataset:
+    return make_image_dataset(key, height=28, width=28, channels=1,
+                              n_per_class=n_per_class)
+
+
+def fmnist_like_split(key, n_train_per_class=200, n_eval_per_class=30):
+    return make_split_dataset(key, n_train_per_class=n_train_per_class,
+                              n_eval_per_class=n_eval_per_class,
+                              height=28, width=28, channels=1)
+
+
+def cifar_like(key, n_per_class=200) -> ImageDataset:
+    return make_image_dataset(key, height=32, width=32, channels=3,
+                              n_per_class=n_per_class)
+
+
+def cifar_like_split(key, n_train_per_class=200, n_eval_per_class=30):
+    return make_split_dataset(key, n_train_per_class=n_train_per_class,
+                              n_eval_per_class=n_eval_per_class,
+                              height=32, width=32, channels=3)

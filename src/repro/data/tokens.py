@@ -1,0 +1,44 @@
+"""Synthetic token streams with client-level topic skew.
+
+Used by the LLM examples and the federated-LLM integration: each client has
+a "topic" = a preferred slice of the vocabulary; sequences are first-order
+Markov chains inside the topic slice with occasional global tokens.  The
+topic skew plays the role the class skew plays for images — PCA+K-means on
+mean-pooled embeddings can tell clients apart (core.features).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topic_token_batch(key, *, batch: int, seq_len: int, vocab: int,
+                      topic: int, n_topics: int = 8, p_topic: float = 0.85):
+    """(batch, seq_len) int32 tokens biased toward the client's topic slice."""
+    slice_size = vocab // n_topics
+    lo = topic * slice_size
+    kt, kg, km = jax.random.split(key, 3)
+    topical = jax.random.randint(kt, (batch, seq_len), lo, lo + slice_size)
+    glob = jax.random.randint(kg, (batch, seq_len), 0, vocab)
+    use_topic = jax.random.uniform(km, (batch, seq_len)) < p_topic
+    return jnp.where(use_topic, topical, glob).astype(jnp.int32)
+
+
+def make_client_token_data(key, *, n_clients: int, n_seqs: int, seq_len: int,
+                           vocab: int, n_topics: int = 8,
+                           topics_per_client: int = 2):
+    """Per-client token datasets (list of (n_seqs, seq_len) arrays) with
+    non-i.i.d. topic domains, plus the domain list."""
+    datasets, domains = [], []
+    for i in range(n_clients):
+        kk = jax.random.fold_in(key, i)
+        doms = [(i + t) % n_topics for t in range(topics_per_client)]
+        parts = []
+        per = n_seqs // topics_per_client
+        for j, t in enumerate(doms):
+            parts.append(topic_token_batch(
+                jax.random.fold_in(kk, j), batch=per, seq_len=seq_len,
+                vocab=vocab, topic=t, n_topics=n_topics))
+        datasets.append(jnp.concatenate(parts))
+        domains.append(doms)
+    return datasets, domains

@@ -1,0 +1,40 @@
+"""Linear evaluation (paper Sec. V): freeze the global encoder, train a
+linear classifier on its embeddings at the server, report accuracy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import autoencoder as ae
+
+
+def linear_evaluation(key, global_params, ae_cfg, train_x, train_y,
+                      test_x, test_y, *, n_classes=10, iters=1000,
+                      lr=0.5, weight_decay=1e-4):
+    """Returns (test_accuracy, train_accuracy)."""
+    z_tr = ae.encode(global_params, train_x, ae_cfg)
+    z_te = ae.encode(global_params, test_x, ae_cfg)
+    mu, sd = jnp.mean(z_tr, 0), jnp.std(z_tr, 0) + 1e-6
+    z_tr = (z_tr - mu) / sd
+    z_te = (z_te - mu) / sd
+
+    d = z_tr.shape[1]
+    w = jnp.zeros((d, n_classes))
+    b = jnp.zeros((n_classes,))
+
+    def loss(wb):
+        w, b = wb
+        logits = z_tr @ w + b
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.mean(jnp.take_along_axis(logp, train_y[:, None], 1))
+        return nll + weight_decay * jnp.sum(jnp.square(w))
+
+    @jax.jit
+    def step(wb, _):
+        g = jax.grad(loss)(wb)
+        return jax.tree.map(lambda p, gg: p - lr * gg, wb, g), None
+
+    (w, b), _ = jax.lax.scan(step, (w, b), None, length=iters)
+    acc_te = jnp.mean((jnp.argmax(z_te @ w + b, 1) == test_y))
+    acc_tr = jnp.mean((jnp.argmax(z_tr @ w + b, 1) == train_y))
+    return float(acc_te), float(acc_tr)

@@ -1,0 +1,99 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * TPU backend           -> compiled Pallas kernel
+  * CPU + REPRO_FORCE_PALLAS=1 -> Pallas in interpret mode (tests)
+  * CPU otherwise         -> pure-jnp oracle (`ref.py`)
+
+Wrappers also handle padding to kernel-friendly shapes (d -> x128 for the
+MXU, sequence -> block multiples) and un-padding of the results, so callers
+never see alignment constraints.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
+
+
+def _use_pallas(override):
+    if override is not None:
+        return override
+    if jax.default_backend() == "tpu":
+        return True
+    return os.environ.get("REPRO_FORCE_PALLAS", "0") == "1"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult, value=0.0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), pad
+
+
+# ---------------------------------------------------------------------------
+# kmeans assignment
+# ---------------------------------------------------------------------------
+
+def kmeans_assign(x, centroids, use_pallas=None):
+    """x: (n, d), centroids: (k, d) -> (assign (n,) int32, min_d2 (n,) f32)."""
+    if not _use_pallas(use_pallas):
+        return ref.kmeans_assign_ref(x, centroids)
+    n, d = x.shape
+    block_n = min(512, max(8, 1 << (n - 1).bit_length()))
+    xp, pad_n = _pad_to(x, 0, block_n)
+    xp, _ = _pad_to(xp, 1, 128)
+    cp, _ = _pad_to(centroids, 1, 128)
+    # pad k to a multiple of 8; padded centroids at +inf distance
+    k = centroids.shape[0]
+    pad_k = (-k) % 8
+    if pad_k:
+        big = jnp.full((pad_k, cp.shape[1]), 1e15, cp.dtype)
+        cp = jnp.concatenate([cp, big], axis=0)
+    assign, min_d2 = kmeans_assign_pallas(
+        xp, cp, interpret=_interpret(),
+        block_n=min(block_n, xp.shape[0]))
+    if pad_n:
+        assign, min_d2 = assign[:n], min_d2[:n]
+    return assign, min_d2
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    use_pallas=None, block_q=None, block_k=None):
+    """q: (B,S,H,hd); k,v: (B,L,Kv,hd) -> (B,S,H,hd)."""
+    if not _use_pallas(use_pallas):
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       q_offset=q_offset)
+    b, s, h, hd = q.shape
+    lk = k.shape[1]
+    bq = block_q or min(512, max(8, 1 << (s - 1).bit_length()))
+    bk = block_k or min(512, max(8, 1 << (lk - 1).bit_length()))
+    qp, pad_q = _pad_to(q, 1, bq)
+    kp, pad_k = _pad_to(k, 1, bk)
+    vp, _ = _pad_to(v, 1, bk)
+    # padded KV positions are masked out by the causal test only if they are
+    # in the future; mask them explicitly by pushing them past every query.
+    if pad_k and not causal:
+        # give padded keys -inf by exploiting the window test
+        raise NotImplementedError("non-causal padded flash attention")
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 q_offset=q_offset, interpret=_interpret(),
+                                 block_q=min(bq, qp.shape[1]),
+                                 block_k=min(bk, kp.shape[1]))
+    return out[:, :s] if pad_q else out

@@ -1,0 +1,23 @@
+"""Production mesh definitions.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips of a
+v5e pod.  Multi-pod: (pod=2, data=16, model=16) = 512 chips; the "pod" axis
+is an outer data-parallel/FSDP axis whose collectives cross the DCN/ICI
+boundary between pods.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — smoke tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,108 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration harness (§Perf): apply a named variant to a
+(arch, shape) pair, re-lower on the production mesh, and report the three
+roofline terms next to the baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch llama3-8b \
+        --shape train_4k --variant bf16_params
+
+Variants are the hypothesis->change->measure loop's "change" step; each one
+is a pure config transformation so baselines stay reproducible.
+"""
+import argparse
+import dataclasses
+import json
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch import specs as sp
+from repro.launch.dryrun import roofline_record, lower_and_compile
+from repro.launch.mesh import make_production_mesh
+
+
+def v_baseline(cfg):
+    return cfg
+
+
+def v_bf16_params(cfg):
+    """Store parameters in bf16 (f32 Adam moments remain): halves FSDP
+    all-gather volume and parameter HBM traffic."""
+    return dataclasses.replace(cfg, param_dtype="bfloat16")
+
+
+def v_moe_fine_groups(cfg):
+    """Shrink MoE dispatch groups from one-per-batch-row to 512-token
+    groups: the GShard one-hot dispatch tensor is O(T^2 k cf / (G E)) —
+    finer groups cut it quadratically."""
+    return dataclasses.replace(cfg, moe_group_size=512)
+
+
+def v_moe_gather(cfg):
+    """Sort/gather-based MoE dispatch (no (T,E,C) one-hot at all)."""
+    return dataclasses.replace(cfg, moe_dispatch="gather")
+
+
+def v_seq_shard(cfg):
+    """Sequence-parallel activation constraints between layer units."""
+    return dataclasses.replace(cfg, act_seq_shard=True)
+
+
+def v_bf16_logits(cfg):
+    """bf16 LM-head logits (CE still reduces in f32): halves the single
+    largest activation tensor of large-vocab training steps."""
+    return dataclasses.replace(cfg, logits_dtype="bfloat16")
+
+
+def v_bf16_all(cfg):
+    """Stack bf16 params + bf16 logits."""
+    return v_bf16_logits(v_bf16_params(cfg))
+
+
+VARIANTS = {
+    "baseline": v_baseline,
+    "bf16_params": v_bf16_params,
+    "bf16_logits": v_bf16_logits,
+    "bf16_all": v_bf16_all,
+    "moe_fine_groups": v_moe_fine_groups,
+    "moe_gather": v_moe_gather,
+    # group-local argsort: the dispatch sort never crosses data shards
+    "moe_gather_grouped": lambda cfg: v_moe_gather(
+        dataclasses.replace(cfg, moe_group_size=4096)),
+    "moe_gather_seq": lambda cfg: v_seq_shard(v_moe_gather(cfg)),
+    "moe_gather_grouped_seq": lambda cfg: v_seq_shard(v_moe_gather(
+        dataclasses.replace(cfg, moe_group_size=4096))),
+    "seq_shard": v_seq_shard,
+    "seq_bf16_logits": lambda cfg: v_bf16_logits(v_seq_shard(cfg)),
+}
+
+
+def run(arch, shape_name, variant, out_dir="runs/perf"):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = sp.shape_config(get_config(arch), shape)
+    cfg = VARIANTS[variant](cfg)
+    mesh = make_production_mesh()
+    full_rec, _ = lower_and_compile(cfg, shape, mesh)
+    rec = roofline_record(cfg, shape, mesh, full_rec)
+    rec.update(arch=arch, shape=shape_name, variant=variant)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{arch}--{shape_name}--{variant}.json"),
+              "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    print(f"{arch} {shape_name} {variant}: "
+          f"t_comp={rec['t_compute_s']:.3g}s t_mem={rec['t_memory_s']:.3g}s "
+          f"t_coll={rec['t_collective_s']:.3g}s -> {rec['bottleneck']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    args = ap.parse_args()
+    run(args.arch, args.shape, args.variant)
+
+
+if __name__ == "__main__":
+    main()

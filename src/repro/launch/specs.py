@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins + logical shardings for every step's inputs.
+
+``input_specs(cfg, shape)`` returns (batch_specs, batch_logical) — weak-type
+correct, shardable, zero allocation.  For VLM/audio the modality frontend is
+stubbed per the brief: the specs carry precomputed patch embeddings / codec
+token ids of the right shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.configs.base import InputShape, ModelConfig
+
+VLM_IMG_TOKENS = 256  # patch tokens prepended by the stubbed vision frontend
+
+
+def shape_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-specialised config: long_500k decode on a full-attention arch
+    switches to its documented sliding-window long-context mode."""
+    if (shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid")
+            and cfg.attention != "sliding"):
+        assert cfg.long_context_mode == "sliding_window", cfg.name
+        return dataclasses.replace(cfg, attention="sliding")
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, b: int, s: int):
+    i32 = jnp.int32
+    if cfg.frontend == "audio_codec":
+        specs = {"codes": _sds((b, s, cfg.n_codebooks), i32),
+                 "labels": _sds((b, s, cfg.n_codebooks), i32)}
+        logical = {"codes": (sh.BATCH, None, None),
+                   "labels": (sh.BATCH, None, None)}
+    elif cfg.frontend == "vision_stub":
+        n_img = min(VLM_IMG_TOKENS, s // 2)
+        specs = {"embeds": _sds((b, n_img, cfg.frontend_dim), jnp.bfloat16),
+                 "tokens": _sds((b, s - n_img), i32),
+                 "labels": _sds((b, s), i32)}
+        logical = {"embeds": (sh.BATCH, None, None),
+                   "tokens": (sh.BATCH, None),
+                   "labels": (sh.BATCH, None)}
+    else:
+        specs = {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32)}
+        logical = {"tokens": (sh.BATCH, None), "labels": (sh.BATCH, None)}
+    return specs, logical
+
+
+def prefill_input_specs(cfg: ModelConfig, b: int, s: int):
+    specs, logical = train_input_specs(cfg, b, s)
+    specs.pop("labels")
+    logical.pop("labels")
+    return specs, logical
+
+
+def decode_input_specs(cfg: ModelConfig, b: int):
+    i32 = jnp.int32
+    if cfg.frontend == "audio_codec":
+        return ({"codes": _sds((b, 1, cfg.n_codebooks), i32)},
+                {"codes": (sh.BATCH, None, None)})
+    return ({"token": _sds((b, 1), i32)}, {"token": (sh.BATCH, None)})
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """(specs, logical) for the step the shape exercises."""
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape.global_batch, shape.seq_len)
+    return decode_input_specs(cfg, shape.global_batch)

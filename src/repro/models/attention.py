@@ -1,0 +1,159 @@
+"""Core attention math: GQA, causal / sliding-window, train + decode paths.
+
+The jnp path here is also the oracle for the Pallas flash-attention kernel
+(`repro.kernels.flash_attention`); `use_flash=True` routes through the kernel
+(interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,Kv,G,hd)  k: (B,L,Kv,hd) -> (B,Kv,G,S,L) f32."""
+    return jnp.einsum("bskgd,blkd->bkgsl", q, k, preferred_element_type=jnp.float32)
+
+
+def _split_gqa(q, n_kv):
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+CHUNKED_THRESHOLD = 2048  # beyond this KV length, use the online-softmax path
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              use_flash: bool = False, q_offset: int = 0):
+    """Full-sequence attention (training / prefill).
+
+    q: (B,S,H,hd); k,v: (B,L,Kv,hd).  ``window`` -> sliding-window mask.
+    ``q_offset``: absolute position of q[0] relative to k[0] (chunked prefill).
+
+    Dispatch: Pallas flash kernel (TPU) > chunked online-softmax scan (long
+    sequences — never materialises the (S, L) score matrix, the pure-JAX
+    analogue of the fused kernel) > plain masked softmax (short sequences).
+    """
+    if use_flash:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset)
+    if k.shape[1] > CHUNKED_THRESHOLD:
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset)
+    b, s, h, d = q.shape
+    n_kv = k.shape[2]
+    qg = _split_gqa(q, n_kv)
+    scores = _gqa_scores(qg, k) * (d ** -0.5)      # (B,Kv,G,S,L)
+    qpos = jnp.arange(s) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgsl,blkd->bskgd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                      kv_chunk=1024):
+    """Online-softmax attention, scanned over KV chunks.
+
+    Memory: O(S * kv_chunk) scores + O(S * hd) accumulators — the jnp
+    counterpart of the Pallas flash kernel, used for long-sequence
+    train/prefill on non-TPU backends and inside the dry-run."""
+    b, s, h, d = q.shape
+    lk = k.shape[1]
+    n_kv = k.shape[2]
+    kv_chunk = min(kv_chunk, lk)
+    pad = (-lk) % kv_chunk
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k, v = zf(k), zf(v)
+    nc = (lk + pad) // kv_chunk
+    qg = _split_gqa(q, n_kv).astype(jnp.float32) * (d ** -0.5)
+    kc = jnp.moveaxis(k.reshape(b, nc, kv_chunk, n_kv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, kv_chunk, n_kv, d), 1, 0)
+    qpos = (jnp.arange(s) + q_offset)[None, None, None, :, None]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kx, vx = inp
+        scores = jnp.einsum("bskgd,blkd->bkgsl", qg, kx.astype(jnp.float32))
+        kpos = (ci * kv_chunk + jnp.arange(kv_chunk))[None, None, None, None, :]
+        mask = kpos < lk
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.where(mask, jnp.exp(scores - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgsl,blkd->bkgsd", p, vx.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    g = h // n_kv
+    init = (jnp.full((b, n_kv, g, s), NEG_INF, jnp.float32),
+            jnp.zeros((b, n_kv, g, s), jnp.float32),
+            jnp.zeros((b, n_kv, g, s, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (jnp.arange(nc), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, *, pos):
+    """One-token attention against a cache.
+
+    q: (B,1,H,hd); k_cache/v_cache: (B,W,Kv,hd);
+    slot_pos: (W,) absolute position held by each cache slot (-1 = empty);
+    pos: current absolute position (scalar int).
+    """
+    b, _, h, d = q.shape
+    n_kv = k_cache.shape[2]
+    qg = _split_gqa(q, n_kv)                        # (B,1,Kv,G,hd)
+    scores = _gqa_scores(qg, k_cache) * (d ** -0.5)  # (B,Kv,G,1,W)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgsl,blkd->bskgd", probs, v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+# ---------------------------------------------------------------------------
+# KV cache helpers (rotating ring buffer for sliding window; linear otherwise)
+# ---------------------------------------------------------------------------
+
+def cache_slot(pos, cache_len: int):
+    """Ring-buffer slot for absolute position ``pos``."""
+    return pos % cache_len
+
+
+def cache_write(k_cache, v_cache, k_new, v_new, pos, cache_len: int):
+    """Write one token's K/V at the ring slot for ``pos``.
+
+    k_new/v_new: (B,1,Kv,hd)."""
+    slot = cache_slot(pos, cache_len)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype),
+                                           (0, slot, 0, 0))
+    return k_cache, v_cache
+
+
+def cache_slot_positions(pos, cache_len: int):
+    """Absolute position stored in each ring slot after writing ``pos``.
+
+    Slot s holds the most recent position p <= pos with p % W == s,
+    or -1 if no such p exists yet (p would be negative).
+    """
+    slots = jnp.arange(cache_len)
+    p = pos - ((pos - slots) % cache_len)
+    return jnp.where(p >= 0, p, -1)

@@ -1,0 +1,119 @@
+"""Declarative parameter specs + shared layers (norms, embeddings, init).
+
+Parameters are declared as a pytree of :class:`Spec` leaves.  From one spec
+tree we derive (a) initialised parameters, (b) ShapeDtypeStructs for dry-run
+lowering, and (c) logical-axis tuples for sharding — guaranteeing the three
+never drift apart.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+
+
+class Spec(NamedTuple):
+    shape: tuple
+    logical: tuple          # logical axis name (or None) per dim
+    init: str = "normal"    # normal | zeros | ones | scaled | lambda_init
+
+    def __post_init__(self):  # pragma: no cover - NamedTuple has no post_init
+        pass
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _init_leaf(key, spec: Spec, dtype, n_layers: int = 1):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "lambda_init":  # RG-LRU Λ: a in [0.9, 0.999]
+        u = jax.random.uniform(key, spec.shape, dtype, 0.9, 0.999)
+        # Λ such that sigmoid(Λ)^8 = a  =>  Λ = logit(a^{1/8})
+        a8 = u ** (1.0 / 8.0)
+        return jnp.log(a8 / (1 - a8)).astype(dtype)
+    if spec.init == "he":  # fan-in scaled (convs/denses trained by raw SGD)
+        fan_in = math.prod(spec.shape[:-1]) or 1
+        scale = math.sqrt(2.0 / fan_in)
+    else:
+        scale = 0.02
+        if spec.init == "scaled":  # residual-out projections
+            scale = 0.02 / math.sqrt(2 * max(n_layers, 1))
+    return (jax.random.normal(key, spec.shape) * scale).astype(dtype)
+
+
+def init_params(key, spec_tree, dtype, n_layers: int = 1):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, s, dtype, n_layers) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_shapes(spec_tree, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree, is_leaf=is_spec
+    )
+
+
+def param_logical(spec_tree):
+    return jax.tree.map(lambda s: s.logical, spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int):
+    """Add a leading scan axis of size ``n`` to every Spec in the tree."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (sh.STACK,) + s.logical, s.init),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def group_norm_heads(x, scale, n_heads: int, eps: float = 1e-6):
+    """Per-head group norm used by xLSTM cells. x: (..., H, dh)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def dense(x, w, out_dtype=None):
+    """x @ w with f32 accumulation."""
+    y = jnp.einsum("...d,df->...f", x, w, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype or x.dtype)
+
+
+def embed_lookup(tokens, table, dtype):
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """Mean token-level CE in f32; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,203 @@
+"""Mixture-of-Experts layer: top-k router + GShard-style capacity dispatch.
+
+Design (GSPMD-friendly, the canonical pjit MoE):
+  * tokens are viewed as (G groups, T tokens/group); groups shard over the
+    data axes, experts shard over "model" -> the dispatch einsum lowers to an
+    all-to-all on a real mesh.
+  * per-group expert capacity C = ceil(k * T * capacity_factor / E); overflow
+    tokens are dropped (residual passes through), standard Switch behaviour.
+  * router runs in f32; aux load-balance loss (Switch) is returned for
+    logging / training.
+
+Shapes: x (B, S, D) -> (G, T, D); dispatch (G, T, E, C) one-hot built from
+top-k choices + intra-expert rank via masked cumsum.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro import sharding as sh
+
+
+class MoEOutput(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+    router_probs_mean: jax.Array  # (E,) mean routing prob — load diagnostics
+
+
+def moe_specs(cfg):
+    """Parameter Spec tree for one MoE layer."""
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    p = {
+        "router": cm.Spec((d, e), (sh.D_MODEL, sh.EXPERTS)),
+        "wi_gate": cm.Spec((e, d, f), (sh.EXPERTS, sh.D_MODEL, sh.D_FF)),
+        "wi_up": cm.Spec((e, d, f), (sh.EXPERTS, sh.D_MODEL, sh.D_FF)),
+        "wo": cm.Spec((e, f, d), (sh.EXPERTS, sh.D_FF, sh.D_MODEL), "scaled"),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * (cfg.moe_d_ff or cfg.d_ff)
+        p["shared"] = {
+            "wi_gate": cm.Spec((d, fs), (sh.D_MODEL, sh.D_FF)),
+            "wi_up": cm.Spec((d, fs), (sh.D_MODEL, sh.D_FF)),
+            "wo": cm.Spec((fs, d), (sh.D_FF, sh.D_MODEL), "scaled"),
+        }
+    return p
+
+
+def _top_k_mask(router_probs, k: int):
+    """(G,T,E) probs -> (G,T,E) bool mask of the top-k experts per token."""
+    _, idx = jax.lax.top_k(router_probs, k)                 # (G,T,k)
+    return jnp.sum(jax.nn.one_hot(idx, router_probs.shape[-1], dtype=jnp.bool_),
+                   axis=-2)
+
+
+def moe_forward(params, x, cfg, *, n_groups: int | None = None):
+    """x: (B, S, D) -> MoEOutput.
+
+    Dispatch paths (cfg.moe_dispatch):
+      * "einsum" — GShard one-hot (G,T,E,C) dispatch/combine einsums.
+        Group count: batch rows by default; cfg.moe_group_size shrinks the
+        O(T_g^2) one-hot by regrouping into fixed-size token groups (§Perf).
+      * "gather" — sort/index-based dispatch: never materialises the
+        (T,E,C) one-hot; builds (E*C, D) expert buffers by scatter and
+        returns by gather (§Perf; ~10^3-10^4x less dispatch memory at 32k
+        sequence lengths).
+    """
+    if cfg.moe_dispatch == "gather":
+        return _moe_forward_gather(params, x, cfg)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    if n_groups is None:
+        if cfg.moe_group_size:
+            n_groups = max(1, (b * s) // cfg.moe_group_size)
+        else:
+            n_groups = b
+    g = n_groups
+    t = (b * s) // g
+    xt = x.reshape(g, t, d)
+
+    # --- router (f32) ---
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G,T,E)
+    topk_mask = _top_k_mask(probs, k)                       # (G,T,E) bool
+    gates = probs * topk_mask                               # zero non-chosen
+    # renormalise the chosen gates (standard top-k routing)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # --- capacity assignment: rank of each (token, expert) within expert ---
+    cap = int(max(1, round(k * t * cfg.capacity_factor / e)))
+    pos_in_expert = jnp.cumsum(topk_mask.astype(jnp.int32), axis=1) - 1  # (G,T,E)
+    keep = topk_mask & (pos_in_expert < cap)
+    onehot_cap = jax.nn.one_hot(jnp.where(keep, pos_in_expert, cap), cap + 1,
+                                dtype=xt.dtype)[..., :cap]   # (G,T,E,C)
+    dispatch = onehot_cap                                    # (G,T,E,C)
+    combine = (dispatch * gates[..., None].astype(xt.dtype)).astype(xt.dtype)
+
+    # --- expert compute ---
+    xe = jnp.einsum("gtd,gtec->gecd", xt, dispatch)          # (G,E,C,D)
+    h_gate = jnp.einsum("gecd,edf->gecf", xe, params["wi_gate"].astype(xt.dtype))
+    h_up = jnp.einsum("gecd,edf->gecf", xe, params["wi_up"].astype(xt.dtype))
+    h = jax.nn.silu(h_gate) * h_up
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(xt.dtype))
+    y = jnp.einsum("gecd,gtec->gtd", ye, combine)            # (G,T,D)
+    y = y.reshape(b, s, d)
+
+    # --- shared experts (always-on dense branch) ---
+    if "shared" in params:
+        y = y + _shared_branch(params, x)
+
+    # --- Switch aux loss: E * sum_e f_e * p_e ---
+    frac_tokens = jnp.mean(topk_mask.astype(jnp.float32), axis=(0, 1))  # (E,)
+    mean_probs = jnp.mean(probs, axis=(0, 1))                           # (E,)
+    aux = e * jnp.sum(frac_tokens * mean_probs) / k
+    return MoEOutput(y, aux.astype(jnp.float32), mean_probs)
+
+
+def _shared_branch(params, x):
+    sp = params["shared"]
+    hg = cm.dense(x, sp["wi_gate"].astype(x.dtype))
+    hu = cm.dense(x, sp["wi_up"].astype(x.dtype))
+    return cm.dense(jax.nn.silu(hg) * hu, sp["wo"].astype(x.dtype))
+
+
+def _gather_dispatch_one(xt, params, cfg, cap):
+    """Gather dispatch for one token group. xt: (T, D); returns (y, probs)."""
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T,E)
+    top_p, top_e = jax.lax.top_k(probs, k)                   # (T,k)
+    gates = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    eid = top_e.reshape(-1)                                  # (T*k,)
+    tid = jnp.repeat(jnp.arange(t), k)                       # (T*k,)
+    gat = gates.reshape(-1)
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tid_s, gat_s = eid[order], tid[order], gat[order]
+    first = jnp.searchsorted(eid_s, jnp.arange(e))           # (E,)
+    rank = jnp.arange(t * k) - first[eid_s]
+    keep = rank < cap
+    slot = jnp.where(keep, eid_s * cap + rank, e * cap)      # overflow slot
+
+    xbuf = jnp.zeros((e * cap + 1, d), xt.dtype)
+    xbuf = xbuf.at[slot].set(xt[tid_s])
+    xe = xbuf[: e * cap].reshape(e, cap, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe,
+                               params["wi_gate"].astype(xt.dtype))) * \
+        jnp.einsum("ecd,edf->ecf", xe, params["wi_up"].astype(xt.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(xt.dtype))
+    ybuf = ye.reshape(e * cap, d)
+
+    contrib = ybuf[jnp.minimum(slot, e * cap - 1)] * \
+        (gat_s * keep).astype(xt.dtype)[:, None]
+    y = jnp.zeros((t, d), xt.dtype).at[tid_s].add(contrib)
+    return y, probs, top_e
+
+
+def _moe_forward_gather(params, x, cfg):
+    """Sort/index dispatch: O(T*k + E*C) memory instead of O(T*E*C).
+
+    1. top-k routing as usual -> (T, k) expert ids + gates.
+    2. flatten to T*k (token, expert) pairs; stable-sort by expert id.
+    3. rank within expert = position - first-occurrence(expert); pairs with
+       rank >= C drop (same capacity semantics as the einsum path).
+    4. scatter token features into an (E*C, D) buffer, run the batched
+       expert matmuls, gather back and combine with the gates.
+
+    cfg.moe_group_size > 0 applies the dispatch per token group (vmapped):
+    the argsort becomes group-local, so on a sharded mesh it never induces
+    a global all-gather of the token stream.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    if cfg.moe_group_size and t > cfg.moe_group_size:
+        g = max(1, t // cfg.moe_group_size)
+        tg = t // g
+        cap = int(max(1, round(k * tg * cfg.capacity_factor / e)))
+        xt = x.reshape(g, tg, d)
+        y, probs, top_e = jax.vmap(
+            lambda xg: _gather_dispatch_one(xg, params, cfg, cap))(xt)
+        y = y.reshape(b, s, d)
+        probs = probs.reshape(t, e)
+        top_e = top_e.reshape(t, k)
+    else:
+        cap = int(max(1, round(k * t * cfg.capacity_factor / e)))
+        y, probs, top_e = _gather_dispatch_one(x.reshape(t, d), params, cfg,
+                                               cap)
+        y = y.reshape(b, s, d)
+
+    if "shared" in params:
+        y = y + _shared_branch(params, x)
+
+    onehot_e = jax.nn.one_hot(top_e, e, dtype=jnp.float32)   # (T,k,E)
+    frac_tokens = jnp.mean(jnp.sum(onehot_e, 1), axis=0)     # (E,)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * mean_probs) / k
+    return MoEOutput(y, aux.astype(jnp.float32), mean_probs)

@@ -1,0 +1,117 @@
+"""Model registry: one uniform handle over every architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` bundling init / spec / logical
+trees and the three forward entry points, plus jit-able train/prefill/decode
+steps used by the launcher, the FL substrate and the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro import sharding as sh
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    specs: Any
+
+    # ---- params ----
+    def init(self, key):
+        return cm.init_params(key, self.specs, self.cfg.p_dtype,
+                              n_layers=self.cfg.n_layers)
+
+    def param_shapes(self):
+        return cm.param_shapes(self.specs, self.cfg.p_dtype)
+
+    def param_logical(self):
+        return cm.param_logical(self.specs)
+
+    def n_params(self) -> int:
+        import math
+        return sum(math.prod(s.shape)
+                   for s in jax.tree.leaves(self.param_shapes()))
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: routed experts count k/E)."""
+        import math
+        cfg = self.cfg
+        if not cfg.is_moe:
+            return self.n_params()
+        total = 0
+        for path, s in jax.tree.flatten_with_path(self.param_shapes())[0]:
+            size = math.prod(s.shape)
+            keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+            if "moe" in keys and "shared" not in keys and "router" not in keys:
+                size = size * cfg.experts_per_token // cfg.n_experts
+            total += size
+        return total
+
+    # ---- forwards ----
+    def loss_fn(self, params, batch, *, remat=False, use_flash=False):
+        return tf.forward_train(params, batch, self.cfg, remat=remat,
+                                use_flash=use_flash)
+
+    def prefill(self, params, batch, *, max_len=None, use_flash=False):
+        return tf.forward_prefill(params, batch, self.cfg, max_len=max_len,
+                                  use_flash=use_flash)
+
+    def decode(self, params, cache, batch):
+        return tf.forward_decode(params, cache, batch, self.cfg)
+
+    def init_cache(self, batch: int, seq_len: int):
+        return tf.init_cache(self.cfg, batch, seq_len, self.cfg.act_dtype)
+
+    def cache_logical(self, seq_len: int, model_axis_size: int):
+        return tf.cache_logical(self.cfg, seq_len, model_axis_size)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, specs=tf.model_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# step functions (pure; jit them with shardings at the call site)
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, tc: TrainConfig) -> Callable:
+    cfg = model.cfg
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            loss, metrics = model.loss_fn(p, batch, remat=(tc.remat != "none"))
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        grads, gnorm = optim.optimizers.clip_by_global_norm(grads, tc.grad_clip)
+        lr = optim.cosine_warmup(opt_state.step, base_lr=tc.learning_rate,
+                                 warmup_steps=tc.warmup_steps,
+                                 total_steps=tc.total_steps)
+        params, opt_state = optim.opt_update(
+            tc.optimizer, params, grads, opt_state, lr,
+            **({"beta1": tc.beta1, "beta2": tc.beta2, "eps": tc.eps,
+                "weight_decay": tc.weight_decay}
+               if tc.optimizer == "adamw" else {}))
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, batch):
+        return model.decode(params, cache, batch)
+    return decode_step

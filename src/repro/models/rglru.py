@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+  a_t = exp(-c * softplus(Lambda) * r_t),  r_t = sigmoid(W_a x_t),
+  i_t = sigmoid(W_x x_t),  c = 8.
+
+TPU adaptation: the diagonal linear recurrence is computed with
+`lax.associative_scan` over (log a_t, b_t) pairs — a parallel prefix scan
+mapping onto the VPU — rather than a sequential CUDA kernel.  Decode is a
+single fused elementwise step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro import sharding as sh
+
+_C = 8.0
+
+
+def rglru_specs(cfg):
+    d, dr = cfg.d_model, cfg.rglru_d_rnn
+    cw = cfg.rglru_conv_width
+    return {
+        "ln": cm.Spec((d,), (sh.D_MODEL,), "zeros"),
+        "w_x": cm.Spec((d, dr), (sh.D_MODEL, sh.D_FF)),      # recurrent branch
+        "w_gate": cm.Spec((d, dr), (sh.D_MODEL, sh.D_FF)),   # GeLU gate branch
+        "conv_w": cm.Spec((cw, dr), (None, sh.D_FF)),
+        "conv_b": cm.Spec((dr,), (sh.D_FF,), "zeros"),
+        "lam": cm.Spec((dr,), (sh.D_FF,), "lambda_init"),
+        "w_a": cm.Spec((dr, dr), (sh.D_FF, None)),
+        "b_a": cm.Spec((dr,), (None,), "zeros"),
+        "w_i": cm.Spec((dr, dr), (sh.D_FF, None)),
+        "b_i": cm.Spec((dr,), (None,), "zeros"),
+        "w_out": cm.Spec((dr, d), (sh.D_FF, sh.D_MODEL), "scaled"),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, Dr) recurrent state
+    conv: jax.Array       # (B, cw-1, Dr) conv history
+
+
+def rglru_init_state(b, dr, cw, dtype=jnp.float32):
+    return RGLRUState(jnp.zeros((b, dr), dtype), jnp.zeros((b, cw - 1, dr), dtype))
+
+
+def _gates(x, p):
+    """x: (..., Dr) conv output -> (log_a, gated input) both f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xf)
+    return log_a, b
+
+
+def rglru_scan(x, p, h0):
+    """x: (B,S,Dr) conv output; h0: (B,Dr). Associative scan over time."""
+    log_a, b = _gates(x, p)                          # (B,S,Dr) each
+    # fold h0 into the first step: b_0 += a_0 * h0
+    a = jnp.exp(log_a)
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2_, b2 = c2
+        return a1 * a2_, b2 + a2_ * b1
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(x_t, p, h_prev):
+    """x_t: (B,Dr) conv output; one decode step."""
+    log_a, b = _gates(x_t, p)
+    h = jnp.exp(log_a) * h_prev.astype(jnp.float32) + b
+    return h, h
+
+
+def rglru_block(p, x, cfg, state: RGLRUState | None = None):
+    """Full recurrent block: LN -> (conv -> RG-LRU) * GeLU gate -> out proj.
+
+    x: (B,S,D). Returns (y, new_state)."""
+    b, s, d = x.shape
+    dr = cfg.rglru_d_rnn
+    cw = cfg.rglru_conv_width
+    if state is None:
+        state = rglru_init_state(b, dr, cw)
+    xin = cm.rms_norm(x, p["ln"])
+    xr = cm.dense(xin, p["w_x"].astype(x.dtype))     # (B,S,Dr)
+    gate = jax.nn.gelu(cm.dense(xin, p["w_gate"].astype(x.dtype)))
+    from repro.models.xlstm import causal_conv
+    xc, conv_state = causal_conv(xr, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), state.conv)
+    if s == 1:
+        h, h_last = rglru_step(xc[:, 0], p, state.h)
+        h = h[:, None]
+    else:
+        h, h_last = rglru_scan(xc, p, state.h)
+    y = h.astype(x.dtype) * gate
+    out = x + cm.dense(y, p["w_out"].astype(x.dtype))
+    return out, RGLRUState(h_last, conv_state)

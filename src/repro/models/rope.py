@@ -1,0 +1,53 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head_dim//2 frequency bands into (t, h, w) sections, each
+rotated by its own position stream.  For text-only inputs the three streams
+coincide (t = h = w = token index), which is exactly Qwen2-VL's behaviour on
+text; the vision stub feeds distinct h/w grids.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)          # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, hd); positions3: (B, S, 3) int32 (t, h, w);
+    sections: split of hd//2 bands, sum(sections) == hd // 2.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)          # (half,)
+    # Select which position stream drives each frequency band.
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+    )                                               # (half,) in {0,1,2}
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :], positions3.shape[:2] + (half,)).astype(jnp.int32) % positions3.shape[-1],
+        axis=-1,
+    )                                               # (B, S, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

@@ -1,0 +1,515 @@
+"""Decoder backbone assembly for all six architecture families.
+
+Layer stacking: layers are grouped into *units* of ``len(block_pattern)``
+layers; the units are ``lax.scan``ned over stacked parameters (one trace per
+pattern position regardless of depth — an 80-layer 72B compiles like a
+1-unit model).  ``n_layers % period`` remainder layers are applied unrolled.
+
+Three entry points:
+  * forward_train(params, batch)      -> (loss, metrics)
+  * forward_prefill(params, batch)    -> (last_logits, cache)
+  * forward_decode(params, cache, batch) -> (logits, cache)
+
+Cache layout: a dict {"pos": int32 scalar, "scan": [per-position pytrees with
+leading n_units axis], "tail": [per-layer pytrees]}.  Attention caches are
+ring buffers of length min(seq_len, window); recurrent blocks carry O(1)
+state — this is the sub-quadratic path that makes long_500k lowerable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.models import common as cm
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.rope import apply_mrope, apply_rope
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": cm.Spec((d, f), (sh.D_MODEL, sh.D_FF)),
+        "wi_up": cm.Spec((d, f), (sh.D_MODEL, sh.D_FF)),
+        "wo": cm.Spec((f, d), (sh.D_FF, sh.D_MODEL), "scaled"),
+    }
+
+
+def attn_specs(cfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "ln1": cm.Spec((d,), (sh.D_MODEL,), "zeros"),
+        "wq": cm.Spec((d, h * hd), (sh.D_MODEL, sh.HEADS)),
+        "wk": cm.Spec((d, kv * hd), (sh.D_MODEL, sh.KV_HEADS)),
+        "wv": cm.Spec((d, kv * hd), (sh.D_MODEL, sh.KV_HEADS)),
+        "wo": cm.Spec((h * hd, d), (sh.HEADS, sh.D_MODEL), "scaled"),
+        "ln2": cm.Spec((d,), (sh.D_MODEL,), "zeros"),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_lib.moe_specs(cfg)
+    else:
+        p["mlp"] = mlp_specs(cfg)
+    return p
+
+
+def block_specs(cfg, kind: str):
+    if kind in ("attn", "local_attn"):
+        return attn_specs(cfg)
+    if kind == "mlstm":
+        return xlstm_lib.mlstm_specs(cfg)
+    if kind == "slstm":
+        return xlstm_lib.slstm_specs(cfg)
+    if kind == "rglru":
+        p = rglru_lib.rglru_specs(cfg)
+        p["ln2"] = cm.Spec((cfg.d_model,), (sh.D_MODEL,), "zeros")
+        p["mlp"] = mlp_specs(cfg)
+        return p
+    raise ValueError(kind)
+
+
+def model_specs(cfg):
+    """Full parameter Spec tree. Scanned units + unrolled tail."""
+    period = len(cfg.block_pattern)
+    n_units, n_tail = divmod(cfg.n_layers, period)
+    specs: dict[str, Any] = {}
+
+    emb: dict[str, Any] = {}
+    if cfg.frontend == "audio_codec":
+        emb["tok"] = cm.Spec((cfg.n_codebooks, cfg.vocab_size, cfg.d_model),
+                             (None, sh.VOCAB, sh.D_MODEL))
+    else:
+        emb["tok"] = cm.Spec((cfg.vocab_size, cfg.d_model),
+                             (sh.VOCAB, sh.D_MODEL))
+    if cfg.frontend == "vision_stub":
+        emb["proj"] = cm.Spec((cfg.frontend_dim, cfg.d_model),
+                              (None, sh.D_MODEL))
+    specs["embed"] = emb
+
+    specs["scan"] = tuple(
+        cm.stack_specs(block_specs(cfg, kind), n_units)
+        for kind in cfg.block_pattern
+    ) if n_units else ()
+    specs["tail"] = tuple(
+        block_specs(cfg, cfg.layer_kinds[n_units * period + i])
+        for i in range(n_tail)
+    )
+    specs["final_norm"] = cm.Spec((cfg.d_model,), (sh.D_MODEL,), "zeros")
+    out_v = cfg.vocab_size * max(cfg.n_codebooks, 1)
+    specs["head"] = cm.Spec((cfg.d_model, out_v), (sh.D_MODEL, sh.VOCAB))
+    return specs
+
+
+def scan_meta(cfg):
+    period = len(cfg.block_pattern)
+    n_units, n_tail = divmod(cfg.n_layers, period)
+    tail_kinds = tuple(cfg.layer_kinds[n_units * period + i] for i in range(n_tail))
+    return period, n_units, tail_kinds
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def attn_cache_len(cfg, kind: str, seq_len: int) -> int:
+    if kind == "local_attn":
+        return min(seq_len, cfg.local_window)
+    if cfg.attention == "sliding":
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def init_block_cache(cfg, kind: str, batch: int, seq_len: int, dtype,
+                     mode: str = "decode"):
+    """mode="prefill": attention entries are None (prefill *produces* the KV
+    cache; allocating input zeros would waste seq_len x layers of HBM)."""
+    d = cfg.d_model
+    if kind in ("attn", "local_attn"):
+        if mode == "prefill":
+            return None
+        w = attn_cache_len(cfg, kind, seq_len)
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros((batch, w, kv, hd), dtype),
+            "v": jnp.zeros((batch, w, kv, hd), dtype),
+        }
+    if kind == "rglru":
+        h = jnp.zeros((batch, cfg.rglru_d_rnn), jnp.float32)
+        conv = jnp.zeros((batch, cfg.rglru_conv_width - 1, cfg.rglru_d_rnn), dtype)
+        return {"h": h, "conv": conv}
+    if kind == "mlstm":
+        di = xlstm_lib._round64(cfg.xlstm_proj_factor * d)
+        dh = di // cfg.n_heads
+        st = xlstm_lib.mlstm_init_state(batch, cfg.n_heads, dh, dh)
+        conv = jnp.zeros((batch, cfg.xlstm_conv_width - 1, di), dtype)
+        return {"C": st.C, "n": st.n, "m": st.m, "conv": conv}
+    if kind == "slstm":
+        st = xlstm_lib.slstm_init_state(batch, d)
+        return {"c": st.c, "n": st.n, "m": st.m, "h": st.h}
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16,
+               mode: str = "decode"):
+    period, n_units, tail_kinds = scan_meta(cfg)
+    scan_caches = tuple(
+        jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape),
+            init_block_cache(cfg, kind, batch, seq_len, dtype, mode),
+        )
+        for kind in cfg.block_pattern
+    ) if n_units else ()
+    tail_caches = tuple(
+        init_block_cache(cfg, kind, batch, seq_len, dtype, mode)
+        for kind in tail_kinds
+    )
+    return {"pos": jnp.zeros((), jnp.int32), "scan": scan_caches,
+            "tail": tail_caches}
+
+
+def cache_logical(cfg, seq_len: int, model_axis_size: int):
+    """Logical-axis tree matching init_cache: shard KV over heads when they
+    divide the model axis, over the cache-sequence dim otherwise."""
+    kv_ok = (cfg.n_kv_heads % model_axis_size == 0)
+
+    def block_logical(kind):
+        if kind in ("attn", "local_attn"):
+            if kv_ok:
+                lg = (sh.BATCH, None, sh.KV_HEADS, None)
+            else:
+                lg = (sh.BATCH, sh.KV_SEQ, None, None)
+            return {"k": lg, "v": lg}
+        if kind == "rglru":
+            return {"h": (sh.BATCH, sh.D_FF), "conv": (sh.BATCH, None, sh.D_FF)}
+        if kind == "mlstm":
+            return {"C": (sh.BATCH, None, None, None), "n": (sh.BATCH, None, None),
+                    "m": (sh.BATCH, None), "conv": (sh.BATCH, None, sh.D_FF)}
+        if kind == "slstm":
+            lg = (sh.BATCH, None)
+            return {"c": lg, "n": lg, "m": lg, "h": lg}
+        raise ValueError(kind)
+
+    period, n_units, tail_kinds = scan_meta(cfg)
+    add_stack = lambda tree: jax.tree.map(
+        lambda lg: (sh.STACK,) + lg,
+        tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    scan_lg = tuple(add_stack(block_logical(k)) for k in cfg.block_pattern) \
+        if n_units else ()
+    tail_lg = tuple(block_logical(k) for k in tail_kinds)
+    return {"pos": sh.SCALAR, "scan": scan_lg, "tail": tail_lg}
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, x, cfg):
+    b, s, _ = x.shape
+    q = cm.dense(x, p["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = cm.dense(x, p["wk"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = cm.dense(x, p["wv"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _apply_rope(q, k, positions, cfg):
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _mlp(p, x):
+    h = jax.nn.silu(cm.dense(x, p["wi_gate"].astype(x.dtype))) * \
+        cm.dense(x, p["wi_up"].astype(x.dtype))
+    return cm.dense(h, p["wo"].astype(x.dtype))
+
+
+def _ffn(p, x, cfg, aux):
+    """Second residual branch (MLP or MoE) of an attention block."""
+    xin = cm.rms_norm(x, p["ln2"])
+    if "moe" in p:
+        out = moe_lib.moe_forward(p["moe"], xin, cfg)
+        aux = aux + out.aux_loss * cfg.router_aux_weight
+        return x + out.y, aux
+    return x + _mlp(p["mlp"], xin), aux
+
+
+def attn_block_seq(p, x, cfg, kind, positions, *, mode, seq_len, pos0, aux,
+                   use_flash=False):
+    """Train/prefill attention block. positions: (B,S) or (B,S,3)."""
+    window = None
+    if kind == "local_attn":
+        window = cfg.local_window
+    elif cfg.attention == "sliding":
+        window = cfg.window
+    xin = cm.rms_norm(x, p["ln1"])
+    q, k, v = _project_qkv(p, xin, cfg)
+    q, k = _apply_rope(q, k, positions, cfg)
+    y = attn.attention(q, k, v, causal=True, window=window, use_flash=use_flash)
+    b, s, _, _ = y.shape
+    x = x + cm.dense(y.reshape(b, s, -1), p["wo"].astype(x.dtype))
+    x, aux = _ffn(p, x, cfg, aux)
+    cache = None
+    if mode == "prefill":
+        # seq_len here is the cache capacity basis (max_len >= s), so the
+        # ring buffer has room for decode steps after the prompt.
+        w = attn_cache_len(cfg, kind, seq_len)
+        if w >= s:      # linear region: positions 0..s-1 land at slots 0..s-1
+            pad = ((0, 0), (0, w - s), (0, 0), (0, 0))
+            cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        else:           # ring: keep the last w positions at slot p % w
+            shift = s % w
+            cache = {"k": jnp.roll(k[:, -w:], shift, axis=1),
+                     "v": jnp.roll(v[:, -w:], shift, axis=1)}
+    return x, cache, aux
+
+
+def attn_block_step(p, cache, x, cfg, kind, pos, aux):
+    """Single-token decode. x: (B,1,D); pos: scalar absolute position."""
+    xin = cm.rms_norm(x, p["ln1"])
+    q, k, v = _project_qkv(p, xin, cfg)
+    b = x.shape[0]
+    posb = jnp.broadcast_to(pos[None, None], (b, 1))
+    if cfg.mrope_sections:
+        posb = jnp.broadcast_to(pos[None, None, None], (b, 1, 3))
+    q, k = _apply_rope(q, k, posb, cfg)
+    w = cache["k"].shape[1]
+    kc, vc = attn.cache_write(cache["k"], cache["v"], k, v, pos, w)
+    slot_pos = attn.cache_slot_positions(pos, w)
+    y = attn.decode_attention(q, kc, vc, slot_pos, pos=pos)
+    x = x + cm.dense(y.reshape(b, 1, -1), p["wo"].astype(x.dtype))
+    x, aux = _ffn(p, x, cfg, aux)
+    return x, {"k": kc, "v": vc}, aux
+
+
+def apply_block(p, cache, x, cfg, kind, positions, *, mode, seq_len, pos, aux,
+                use_flash=False):
+    """Dispatch one block. Returns (x, new_cache, aux)."""
+    if kind in ("attn", "local_attn"):
+        if mode == "decode":
+            return attn_block_step(p, cache, x, cfg, kind, pos, aux)
+        return attn_block_seq(p, x, cfg, kind, positions, mode=mode,
+                              seq_len=seq_len, pos0=pos, aux=aux,
+                              use_flash=use_flash)
+    if kind == "rglru":
+        st = rglru_lib.RGLRUState(cache["h"], cache["conv"]) if cache else None
+        x, new_st = rglru_lib.rglru_block(
+            {k: v for k, v in p.items() if k not in ("ln2", "mlp")}, x, cfg, st)
+        xin = cm.rms_norm(x, p["ln2"])
+        x = x + _mlp(p["mlp"], xin)
+        c = {"h": new_st.h, "conv": new_st.conv} if cache is not None or \
+            mode in ("prefill", "decode") else None
+        return x, c, aux
+    if kind == "mlstm":
+        st = conv = None
+        if cache is not None:
+            st = xlstm_lib.MLSTMState(cache["C"], cache["n"], cache["m"])
+            conv = cache["conv"]
+        x, (new_st, new_conv) = xlstm_lib.mlstm_block(p, x, cfg, st, conv)
+        c = None
+        if mode in ("prefill", "decode"):
+            c = {"C": new_st.C, "n": new_st.n, "m": new_st.m, "conv": new_conv}
+        return x, c, aux
+    if kind == "slstm":
+        st = xlstm_lib.SLSTMState(cache["c"], cache["n"], cache["m"], cache["h"]) \
+            if cache is not None else None
+        x, new_st = xlstm_lib.slstm_block(p, x, cfg, st)
+        c = None
+        if mode in ("prefill", "decode"):
+            c = {"c": new_st.c, "n": new_st.n, "m": new_st.m, "h": new_st.h}
+        return x, c, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch, cfg):
+    """Returns (x: (B,S,D), positions, labels or None)."""
+    emb = params["embed"]
+    dtype = cfg.act_dtype
+    if cfg.frontend == "audio_codec":
+        codes = batch["codes"]                   # (B,S,nq)
+        x = sum(
+            cm.embed_lookup(codes[..., qi], emb["tok"][qi], dtype)
+            for qi in range(cfg.n_codebooks)
+        )
+        b, s = codes.shape[:2]
+        labels = batch.get("labels")             # (B,S,nq) or None
+    elif cfg.frontend == "vision_stub":
+        embeds = batch["embeds"]                 # (B,Simg,F)
+        tokens = batch["tokens"]                 # (B,Stxt)
+        ximg = embeds.astype(dtype) @ emb["proj"].astype(dtype)
+        xtxt = cm.embed_lookup(tokens, emb["tok"], dtype)
+        x = jnp.concatenate([ximg, xtxt], axis=1)
+        b, s = x.shape[:2]
+        labels = batch.get("labels")             # (B,S) aligned to full seq
+    else:
+        tokens = batch["tokens"]
+        x = cm.embed_lookup(tokens, emb["tok"], dtype)
+        b, s = tokens.shape
+        labels = batch.get("labels")
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    return x, positions, labels
+
+
+def logits_from_hidden(params, x, cfg):
+    x = cm.rms_norm(x, params["final_norm"])
+    out_t = jnp.dtype(cfg.logits_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype),
+                        preferred_element_type=out_t)
+    if cfg.n_codebooks:
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_size)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# full forwards
+# ---------------------------------------------------------------------------
+
+def _seq_shard_constraint(x):
+    """Sequence-parallel activation constraint (§Perf variant): between
+    layer units, shard (B, S, D) activations over ("model",) along S so the
+    norm/residual region is fully distributed and XLA picks
+    reduce-scatter + all-gather pairs instead of all-reduces."""
+    try:
+        from jax._src import mesh as mesh_lib
+        pm = mesh_lib.thread_resources.env.physical_mesh
+        if pm.empty or "model" not in pm.shape:
+            return x
+        if x.shape[1] % pm.shape["model"] != 0:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        dp = tuple(a for a in ("pod", "data") if a in pm.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(pm, P(dp, "model", None)))
+    except Exception:
+        return x
+
+
+def _run_stack(params, cache, x, cfg, positions, *, mode, seq_len, pos, aux,
+               remat=False, use_flash=False):
+    period, n_units, tail_kinds = scan_meta(cfg)
+
+    def unit_body(x_aux, unit_in):
+        x, aux = x_aux
+        p_unit, c_unit = unit_in
+        new_cs = []
+        for i, kind in enumerate(cfg.block_pattern):
+            c_i = c_unit[i] if c_unit is not None else None
+            x, c_new, aux = apply_block(p_unit[i], c_i, x, cfg, kind, positions,
+                                        mode=mode, seq_len=seq_len, pos=pos,
+                                        aux=aux, use_flash=use_flash)
+            new_cs.append(c_new)
+        if cfg.act_seq_shard and mode in ("train", "prefill"):
+            x = _seq_shard_constraint(x)
+        ys = tuple(new_cs) if mode in ("prefill", "decode") else None
+        return (x, aux), ys
+
+    body = jax.checkpoint(unit_body) if remat else unit_body
+    if n_units:
+        unroll = n_units if cfg.scan_unroll else 1
+        c_scan = cache["scan"] if cache is not None else None
+        if c_scan is None or len(c_scan) == 0:
+            (x, aux), ys = jax.lax.scan(
+                lambda carry, p_unit: body(carry, (p_unit, None)),
+                (x, aux), params["scan"], unroll=unroll)
+        else:
+            (x, aux), ys = jax.lax.scan(body, (x, aux),
+                                        (params["scan"], c_scan),
+                                        unroll=unroll)
+        new_scan = ys if mode in ("prefill", "decode") else ()
+    else:
+        new_scan = ()
+
+    new_tail = []
+    for i, kind in enumerate(tail_kinds):
+        c_i = cache["tail"][i] if cache is not None else None
+        x, c_new, aux = apply_block(params["tail"][i], c_i, x, cfg, kind,
+                                    positions, mode=mode, seq_len=seq_len,
+                                    pos=pos, aux=aux, use_flash=use_flash)
+        new_tail.append(c_new)
+    return x, aux, new_scan, tuple(new_tail)
+
+
+def forward_train(params, batch, cfg, *, remat=False, use_flash=False):
+    """Returns (loss, metrics)."""
+    x, positions, labels = embed_inputs(params, batch, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    pos = jnp.zeros((), jnp.int32)
+    x, aux, _, _ = _run_stack(params, None, x, cfg, positions, mode="train",
+                              seq_len=x.shape[1], pos=pos, aux=aux,
+                              remat=remat, use_flash=use_flash)
+    logits = logits_from_hidden(params, x, cfg)
+    ce = cm.cross_entropy(logits[:, :-1], labels[:, 1:])
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def forward_prefill(params, batch, cfg, *, max_len=None, use_flash=False):
+    """Returns (last_token_logits, cache).
+
+    ``max_len``: cache capacity (prompt + expected decode steps).  Defaults
+    to the prompt length — right for prefill-only measurement; serving
+    callers must pass prompt_len + generation budget."""
+    x, positions, _ = embed_inputs(params, batch, cfg)
+    s = x.shape[1]
+    cap = max(max_len or s, s)
+    aux = jnp.zeros((), jnp.float32)
+    pos = jnp.zeros((), jnp.int32)
+    x, aux, new_scan, new_tail = _run_stack(
+        params, init_cache(cfg, x.shape[0], cap, cfg.act_dtype,
+                           mode="prefill"),
+        x, cfg, positions, mode="prefill", seq_len=cap, pos=pos, aux=aux,
+        use_flash=use_flash)
+    logits = logits_from_hidden(params, x[:, -1:], cfg)
+    cache = {"pos": jnp.asarray(s, jnp.int32), "scan": new_scan,
+             "tail": new_tail}
+    return logits, cache
+
+
+def forward_decode(params, cache, batch, cfg):
+    """One new token. batch: {"token": (B,1)} or {"codes": (B,1,nq)}.
+
+    Returns (logits, new_cache)."""
+    pos = cache["pos"]
+    if cfg.frontend == "audio_codec":
+        emb = params["embed"]
+        x = sum(
+            cm.embed_lookup(batch["codes"][..., qi], emb["tok"][qi], cfg.act_dtype)
+            for qi in range(cfg.n_codebooks)
+        )
+    elif cfg.frontend == "vision_stub":
+        x = cm.embed_lookup(batch["token"], params["embed"]["tok"], cfg.act_dtype)
+    else:
+        x = cm.embed_lookup(batch["token"], params["embed"]["tok"], cfg.act_dtype)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(pos[None, None, None], (b, 1, 3))
+    aux = jnp.zeros((), jnp.float32)
+    x, aux, new_scan, new_tail = _run_stack(
+        params, cache, x, cfg, positions, mode="decode", seq_len=0,
+        pos=pos, aux=aux)
+    logits = logits_from_hidden(params, x, cfg)
+    new_cache = {"pos": pos + 1, "scan": new_scan, "tail": new_tail}
+    return logits, new_cache

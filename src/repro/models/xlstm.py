@@ -1,0 +1,308 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, true recurrence).
+
+TPU adaptation: mLSTM is implemented in the *chunkwise-parallel* form —
+a `lax.scan` over chunks carrying (C, n, m) state with a quadratic
+stabilised intra-chunk part — which maps onto the MXU (chunk-local matmuls)
+instead of a GPU-style fused recurrent kernel.  sLSTM is inherently
+sequential (h_{t-1} feeds the gates) and uses `lax.scan` over time.
+
+Both have single-step recurrent forms for decode; tests assert the chunkwise
+and step forms agree.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro import sharding as sh
+
+NEG_INF = -1e30
+
+
+def _round64(x: float) -> int:
+    return max(64, int(math.ceil(x / 64)) * 64)
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg):
+    d = cfg.d_model
+    di = _round64(cfg.xlstm_proj_factor * d)
+    h = cfg.n_heads
+    cw = cfg.xlstm_conv_width
+    return {
+        "ln": cm.Spec((d,), (sh.D_MODEL,), "zeros"),
+        "w_up": cm.Spec((d, 2 * di), (sh.D_MODEL, sh.D_FF)),
+        "conv_w": cm.Spec((cw, di), (None, sh.D_FF)),
+        "conv_b": cm.Spec((di,), (sh.D_FF,), "zeros"),
+        "wq": cm.Spec((di, di), (sh.D_FF, None)),
+        "wk": cm.Spec((di, di), (sh.D_FF, None)),
+        "wv": cm.Spec((di, di), (sh.D_FF, None)),
+        "w_if": cm.Spec((di, 2 * h), (sh.D_FF, None)),
+        "b_if": cm.Spec((2 * h,), (None,), "zeros"),
+        "gn": cm.Spec((di,), (sh.D_FF,), "ones"),
+        "w_down": cm.Spec((di, d), (sh.D_FF, sh.D_MODEL), "scaled"),
+    }
+
+
+def slstm_specs(cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    fu = _round64(4 * d / 3)
+    return {
+        "ln": cm.Spec((d,), (sh.D_MODEL,), "zeros"),
+        "w_gates": cm.Spec((d, 4 * d), (sh.D_MODEL, sh.D_FF)),
+        "r_gates": cm.Spec((h, dh, 4 * dh), (sh.HEADS, None, None)),
+        "b_gates": cm.Spec((4 * d,), (sh.D_FF,), "zeros"),
+        "gn": cm.Spec((d,), (sh.D_MODEL,), "ones"),
+        "ln2": cm.Spec((d,), (sh.D_MODEL,), "zeros"),
+        "ffn_up": cm.Spec((d, fu), (sh.D_MODEL, sh.D_FF)),
+        "ffn_down": cm.Spec((fu, d), (sh.D_FF, sh.D_MODEL), "scaled"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell math
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B,H,dk,dv)
+    n: jax.Array   # (B,H,dk)
+    m: jax.Array   # (B,H)
+
+
+def mlstm_init_state(b, h, dk, dv, dtype=jnp.float32):
+    return MLSTMState(
+        C=jnp.zeros((b, h, dk, dv), dtype),
+        n=jnp.zeros((b, h, dk), dtype),
+        m=jnp.full((b, h), -1e9, dtype),
+    )
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, state: MLSTMState, chunk: int = 256):
+    """Chunkwise-parallel stabilised mLSTM.
+
+    q,k,v: (B,S,H,dh) — q pre-scaled by dh^-0.5 by the caller.
+    i_pre,f_pre: (B,S,H) gate pre-activations.
+    Returns (h: (B,S,H,dh) f32, final state).
+    """
+    b, s, h, dh = q.shape
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e9)       # no input from padding
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=30.0)       # log sigmoid(30) ~ 0:
+        # padded steps neither decay the state nor shift the stabiliser m
+        s_pad = s + pad
+    else:
+        s_pad = s
+    nc = s_pad // chunk
+
+    def to_chunks(x):  # (B,S,...) -> (nc, B, chunk, ...)
+        return jnp.moveaxis(x.reshape(b, nc, chunk, *x.shape[2:]), 1, 0)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic, fc = to_chunks(i_pre), to_chunks(f_pre)
+
+    def step(carry: MLSTMState, inp):
+        qx, kx, vx, ix, fx = inp                     # (B,chunk,H,*)
+        qx = qx.astype(jnp.float32)
+        kx = kx.astype(jnp.float32)
+        vx = vx.astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(fx.astype(jnp.float32))   # (B,c,H)
+        bcum = jnp.cumsum(logf, axis=1)              # inclusive cumsum
+        btot = bcum[:, -1]                           # (B,H)
+        ig = ix.astype(jnp.float32)                  # log input gate pre-act
+
+        # intra-chunk decay matrix D[i,j] = b_i - b_j + i_j  (j <= i)
+        Dm = (bcum[:, :, None, :] - bcum[:, None, :, :] + ig[:, None, :, :])
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dm = jnp.where(tri[None, :, :, None], Dm, NEG_INF)   # (B,i,j,H)
+        m_intra = jnp.max(Dm, axis=2)                # (B,c,H)
+        # inter-chunk scale for q_i on carried state
+        m_inter = bcum + carry.m[:, None, :]         # (B,c,H)
+        m_i = jnp.maximum(m_intra, m_inter)          # (B,c,H)
+
+        sc = jnp.einsum("bihd,bjhd->bijh", qx, kx)   # (B,i,j,H)
+        w = jnp.exp(Dm - m_i[:, :, None, :]) * sc
+        h_intra = jnp.einsum("bijh,bjhd->bihd", w, vx)
+        n_intra = jnp.einsum("bijh,bjhd->bihd",
+                             jnp.exp(Dm - m_i[:, :, None, :]), kx)
+
+        scale_st = jnp.exp(m_inter - m_i)            # (B,c,H)
+        h_inter = jnp.einsum("bihd,bhdv->bihv", qx, carry.C) * scale_st[..., None]
+        n_inter = jnp.einsum("bihd,bhd->bih", qx, carry.n) * scale_st
+
+        num = h_intra + h_inter                      # (B,c,H,dv)
+        den = jnp.abs(jnp.sum(n_intra * qx, axis=-1) + n_inter)  # (B,c,H)
+        den = jnp.maximum(den, jnp.exp(-m_i))
+        hy = num / den[..., None]
+
+        # ---- state update ----
+        decay_j = ig + btot[:, None, :] - bcum       # (B,c,H): i_j + B - b_j
+        m_upd = jnp.max(decay_j, axis=1)             # (B,H)
+        m_new = jnp.maximum(carry.m + btot, m_upd)
+        sj = jnp.exp(decay_j - m_new[:, None, :])    # (B,c,H)
+        C_new = (jnp.exp(carry.m + btot - m_new)[:, :, None, None] * carry.C
+                 + jnp.einsum("bjh,bjhd,bjhv->bhdv", sj, kx, vx))
+        n_new = (jnp.exp(carry.m + btot - m_new)[:, :, None] * carry.n
+                 + jnp.einsum("bjh,bjhd->bhd", sj, kx))
+        return MLSTMState(C_new, n_new, m_new), hy
+
+    final, hs = jax.lax.scan(step, state, (qc, kc, vc, ic, fc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s_pad, h, dh)
+    return hs[:, :s], final
+
+
+def mlstm_step(q, k, v, i_pre, f_pre, state: MLSTMState):
+    """Single-token recurrent mLSTM. q,k,v: (B,H,dh); gates (B,H)."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    ig = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + state.m, ig)
+    fs = jnp.exp(logf + state.m - m_new)
+    is_ = jnp.exp(ig - m_new)
+    C = fs[..., None, None] * state.C + is_[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = fs[..., None] * state.n + is_[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.sum(n * q, -1)), jnp.exp(-m_new))
+    return num / den[..., None], MLSTMState(C, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell math
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B,D)
+    n: jax.Array   # (B,D)
+    m: jax.Array   # (B,D)
+    h: jax.Array   # (B,D)
+
+
+def slstm_init_state(b, d, dtype=jnp.float32):
+    return SLSTMState(jnp.zeros((b, d), dtype), jnp.zeros((b, d), dtype),
+                      jnp.full((b, d), -1e9, dtype), jnp.zeros((b, d), dtype))
+
+
+def slstm_gates(x_t, h_prev, p, n_heads):
+    """Gate pre-activations: W x_t + R_blockdiag h_{t-1} + b -> 4 of (B,D)."""
+    b, d = x_t.shape
+    dh = d // n_heads
+    wx = x_t.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32)
+    hh = h_prev.reshape(b, n_heads, dh).astype(jnp.float32)
+    # r_gates maps dh -> 4*dh per head (block-diagonal recurrence)
+    rh = jnp.einsum("bhd,hde->bhe", hh, p["r_gates"].astype(jnp.float32))
+    rh = rh.reshape(b, n_heads, 4, dh)               # (B,H,4,dh)
+    rh = jnp.moveaxis(rh, 2, 1).reshape(b, 4, d)     # (B,4,D)
+    wx = wx.reshape(b, 4, d)
+    pre = wx + rh + p["b_gates"].astype(jnp.float32).reshape(1, 4, d)
+    z, i, f, o = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    return z, i, f, o
+
+
+def slstm_step(x_t, state: SLSTMState, p, n_heads):
+    z, i, f, o = slstm_gates(x_t, state.h, p, n_heads)
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + state.m, i)
+    fs = jnp.exp(logf + state.m - m_new)
+    is_ = jnp.exp(i - m_new)
+    c = fs * state.c + is_ * jnp.tanh(z)
+    n = fs * state.n + is_
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, m_new, h), h
+
+
+def slstm_sequence(x, state: SLSTMState, p, n_heads):
+    """x: (B,S,D) -> (h: (B,S,D) f32, final state). lax.scan over time."""
+    def step(carry, x_t):
+        carry, h = slstm_step(x_t, carry, p, n_heads)
+        return carry, h
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), final
+
+
+# ---------------------------------------------------------------------------
+# blocks (residual wrappers) — forward over a full sequence or one step
+# ---------------------------------------------------------------------------
+
+def causal_conv(x, w, b, state=None):
+    """Depthwise causal conv over time. x: (B,S,Di), w: (cw,Di).
+
+    state: (B,cw-1,Di) carried history for decode; returns (y, new_state).
+    """
+    cw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(cw)) + b
+    new_state = xp[:, -(cw - 1):, :] if cw > 1 else None
+    return y.astype(x.dtype), new_state
+
+
+def mlstm_block(p, x, cfg, state=None, conv_state=None):
+    """x: (B,S,D). Returns (y, (MLSTMState, conv_state))."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = p["wq"].shape[0]
+    dh = di // h
+    xin = cm.rms_norm(x, p["ln"])
+    up = cm.dense(xin, p["w_up"].astype(x.dtype))
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc, conv_state = causal_conv(xi, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_state)
+    xc = jax.nn.silu(xc)
+    q = cm.dense(xc, p["wq"].astype(x.dtype)).reshape(b, s, h, dh) * dh ** -0.5
+    k = cm.dense(xc, p["wk"].astype(x.dtype)).reshape(b, s, h, dh) * dh ** -0.5
+    v = cm.dense(xi, p["wv"].astype(x.dtype)).reshape(b, s, h, dh)
+    gates = cm.dense(xc, p["w_if"].astype(x.dtype)) + p["b_if"].astype(x.dtype)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)      # (B,S,H)
+    f_pre = f_pre + 3.0                               # remember-bias
+    if state is None:
+        state = mlstm_init_state(b, h, dh, dh)
+    if s == 1:
+        hy, state = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                               i_pre[:, 0], f_pre[:, 0], state)
+        hy = hy[:, None]
+    else:
+        hy, state = mlstm_chunkwise(q, k, v, i_pre, f_pre, state)
+    hy = cm.group_norm_heads(hy, p["gn"].reshape(h, dh), h).reshape(b, s, di)
+    out = hy.astype(x.dtype) * jax.nn.silu(z)
+    y = x + cm.dense(out, p["w_down"].astype(x.dtype))
+    return y, (state, conv_state)
+
+
+def slstm_block(p, x, cfg, state=None):
+    b, s, d = x.shape
+    xin = cm.rms_norm(x, p["ln"])
+    if state is None:
+        state = slstm_init_state(b, d)
+    if s == 1:
+        state, h = slstm_step(xin[:, 0], state, p, cfg.n_heads)
+        h = h[:, None]
+    else:
+        h, state = slstm_sequence(xin, state, p, cfg.n_heads)
+    h = cm.group_norm_heads(h.reshape(b, s, cfg.n_heads, d // cfg.n_heads),
+                            p["gn"].reshape(cfg.n_heads, d // cfg.n_heads),
+                            cfg.n_heads).reshape(b, s, d)
+    x = x + h.astype(x.dtype)
+    # post-FFN (GeLU, pf 4/3)
+    xin2 = cm.rms_norm(x, p["ln2"])
+    f = cm.dense(xin2, p["ffn_up"].astype(x.dtype))
+    y = x + cm.dense(jax.nn.gelu(f), p["ffn_down"].astype(x.dtype))
+    return y, state

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adamw, init_opt_state, opt_update, sgd, sgd_momentum,
+)
+from repro.optim.schedules import cosine_warmup  # noqa: F401

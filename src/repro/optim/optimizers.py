@@ -1,0 +1,97 @@
+"""Minimal, pytree-native optimizers (no external deps).
+
+All states mirror the parameter pytree so sharding rules transfer 1:1
+(each state leaf inherits its parameter's PartitionSpec).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any        # first moment (or momentum); zeros-like params
+    nu: Any        # second moment; () for sgd/momentum
+
+
+def _zeros_like(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def init_opt_state(params, kind: str) -> OptState:
+    step = jnp.zeros((), jnp.int32)
+    if kind == "sgd":
+        return OptState(step, (), ())
+    if kind == "momentum":
+        return OptState(step, _zeros_like(params), ())
+    if kind == "adamw":
+        return OptState(step, _zeros_like(params), _zeros_like(params))
+    raise ValueError(kind)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def sgd(params, grads, state: OptState, lr):
+    new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                              params, grads)
+    return new_params, OptState(state.step + 1, (), ())
+
+
+def sgd_momentum(params, grads, state: OptState, lr, beta: float = 0.9):
+    mu = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype),
+                      state.mu, grads)
+    new_params = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype),
+                              params, mu)
+    return new_params, OptState(state.step + 1, mu, ())
+
+
+def adamw(params, grads, state: OptState, lr, *, beta1=0.9, beta2=0.95,
+          eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - jnp.power(beta1, t)
+    c2 = 1.0 - jnp.power(beta2, t)
+    mu = jax.tree.map(lambda m, g: beta1 * m + (1 - beta1) * g.astype(m.dtype),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: beta2 * v + (1 - beta2)
+                      * jnp.square(g.astype(v.dtype)), state.nu, grads)
+    def upd(p, m, v):
+        mh = m / c1
+        vh = v / c2
+        return (p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+                ).astype(p.dtype)
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step, mu, nu)
+
+
+def opt_update(kind: str, params, grads, state: OptState, lr, **kw):
+    if kind == "sgd":
+        return sgd(params, grads, state, lr)
+    if kind == "momentum":
+        return sgd_momentum(params, grads, state, lr, **kw)
+    if kind == "adamw":
+        return adamw(params, grads, state, lr, **kw)
+    raise ValueError(kind)
+
+
+def opt_state_logical(params_logical, kind: str):
+    """Logical-axis tree for OptState mirroring the params tree."""
+    from repro.sharding import SCALAR
+    if kind == "sgd":
+        return OptState(SCALAR, (), ())
+    if kind == "momentum":
+        return OptState(SCALAR, params_logical, ())
+    return OptState(SCALAR, params_logical, params_logical)

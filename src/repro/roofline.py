@@ -1,0 +1,183 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Terms (seconds, per training/serving step, on the target TPU v5e):
+
+    compute    = HLO_FLOPs        / (chips * 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes        / (chips * 819e9   B/s HBM)
+    collective = collective_bytes / (chips * 50e9    B/s per ICI link)
+
+Methodology notes (CPU container, no wall clocks):
+
+* ``compiled.cost_analysis()`` counts a `lax.scan` body ONCE (XLA's
+  HloCostAnalysis does not multiply by trip count — verified empirically in
+  this container).  Our models scan over layer *units*, so raw numbers would
+  undercount an 80-layer model 80x.  We therefore lower each (arch, shape,
+  mesh) at TWO shallow depths — 1 unit and 2 units (identical embed/head/
+  remainder-tail) — and extrapolate:
+
+      total = cost(depth1) + (n_units - 1) * (cost(depth2) - cost(depth1))
+
+  This is exact for everything outside inner per-layer loops, including the
+  per-layer collectives.
+* Inner recurrent loops (mLSTM chunk scan, sLSTM time scan) are *also*
+  counted once inside their unit; their FLOPs are corrected analytically
+  (multiply the intra-loop component by the trip count).  They contain no
+  collectives.  `lax.associative_scan` (RG-LRU) unrolls into log-depth HLO
+  and is counted fully — no correction needed.
+* collective_bytes is not in cost_analysis: we parse the post-SPMD HLO text
+  and sum result-shape bytes of all-reduce / all-gather / reduce-scatter /
+  all-to-all / collective-permute ops (result size is the standard
+  convention; for all-gather it equals the gathered size, for reduce-scatter
+  the scattered size).  The same two-depth extrapolation applies.
+* Totals are whole-step global; dividing by `chips` assumes even sharding,
+  which in_shardings enforce for every dim the rules actually shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS = 197e12      # bf16 FLOP/s
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from (post-SPMD) HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", line)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        # async collectives appear as op-start/op-done pairs: count -start,
+        # skip -done.  (NB: str.rstrip takes a character set, not a suffix —
+        # it would mangle "all-gather" -> "all-gathe"; use endswith.)
+        if op.endswith("-done"):
+            continue
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op in _COLLECTIVES:
+            out[op] += _shape_bytes(type_str)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float               # global per step
+    bytes_hbm: float           # global per step
+    bytes_collective: float    # global per step
+    chips: int
+    model_flops: float = 0.0   # 6*N*D (or 6*N_active*D) analytic
+    flops_analytic: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_collective / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_hbm": self.bytes_hbm,
+            "bytes_collective": self.bytes_collective,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "flops_analytic": self.flops_analytic,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def extrapolate(c1: dict, c2: dict, n_units: int) -> dict:
+    """total = c1 + (n_units - 1) * (c2 - c1), per numeric key."""
+    out = {}
+    for k in c1:
+        v1 = c1.get(k, 0.0) or 0.0
+        v2 = c2.get(k, 0.0) or 0.0
+        out[k] = v1 + (n_units - 1) * (v2 - v1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs model (cross-check + inner-loop corrections)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, n_params_active: int, shape, *, backward: bool) -> float:
+    """The classic 6*N*D estimate (3x matmul passes in backward) plus the
+    quadratic attention term where applicable.
+
+    N excludes the input embedding table (a lookup, not a matmul); the
+    caller passes active (not total) params for MoE."""
+    n_params_active = n_params_active - cfg.vocab_size * cfg.d_model * \
+        max(cfg.n_codebooks, 1)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if backward else 2.0
+    base = mult * n_params_active * tokens
+    # attention score/value flops: 2 * 2 * B * S * L_ctx * H * hd per layer
+    attn_flops = 0.0
+    kinds = cfg.layer_kinds
+    for kind in kinds:
+        if kind not in ("attn", "local_attn"):
+            continue
+        if shape.kind == "decode":
+            ctx = min(shape.seq_len, cfg.local_window if kind == "local_attn"
+                      else (cfg.window if cfg.attention == "sliding"
+                            else shape.seq_len))
+            s_q = 1
+        else:
+            win = (cfg.local_window if kind == "local_attn"
+                   else (cfg.window if cfg.attention == "sliding" else None))
+            ctx = min(shape.seq_len, win) if win else shape.seq_len / 2
+            s_q = shape.seq_len
+        attn_flops += (2 * 2 * shape.global_batch * s_q * ctx
+                       * cfg.n_heads * cfg.head_dim) * (3 if backward else 1)
+    return base + attn_flops

@@ -1,0 +1,139 @@
+"""Logical-axis -> PartitionSpec rules for single-pod and multi-pod meshes.
+
+The framework names tensor dimensions with *logical* axes ("batch", "d_ff",
+"heads", ...).  A :class:`ShardingRules` instance maps logical axes onto the
+physical mesh axes ("pod", "data", "model") and degrades gracefully: a
+logical dimension whose size does not divide the assigned mesh axes is left
+replicated (PartitionSpec entry ``None``) instead of failing at lower time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis names used throughout the model code.
+BATCH = "batch"
+SEQ = "seq"
+D_MODEL = "d_model"
+D_FF = "d_ff"
+HEADS = "heads"
+KV_HEADS = "kv_heads"
+KV_SEQ = "kv_seq"
+HEAD_DIM = "head_dim"
+VOCAB = "vocab"
+EXPERTS = "experts"
+CLIENTS = "clients"
+STACK = "stack"  # leading scan-over-layers axis; never sharded
+SCALAR = "scalar"  # logical marker for 0-dim tensors (P()); a plain () would
+                   # be ambiguous with an empty pytree container
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names to (tuples of) physical mesh axis names."""
+
+    mesh: Mesh
+    rules: Mapping[str, Any]
+
+    @classmethod
+    def default(cls, mesh: Mesh) -> "ShardingRules":
+        """The framework's standard layout.
+
+        * batch / clients -> the full data-parallel product (pod, data)
+        * model-parallel dims (d_ff, heads, vocab, experts) -> "model"
+        * d_model -> FSDP over (pod, data): 2D-sharded params
+        * kv_seq -> "model" (used when kv_heads is not divisible; the KV
+          cache is then sequence-sharded instead of head-sharded)
+        """
+        has_pod = "pod" in mesh.shape
+        dp = ("pod", "data") if has_pod else ("data",)
+        return cls(
+            mesh=mesh,
+            rules={
+                BATCH: dp,
+                CLIENTS: dp,
+                SEQ: None,
+                D_MODEL: dp,  # FSDP axis for parameters
+                D_FF: "model",
+                HEADS: "model",
+                KV_HEADS: "model",
+                KV_SEQ: "model",
+                HEAD_DIM: None,
+                VOCAB: "model",
+                EXPERTS: "model",
+                STACK: None,
+            },
+        )
+
+    def spec(self, logical: Sequence[str | None], dims: Sequence[int] | None = None) -> P:
+        """PartitionSpec for a tensor whose dims carry the given logical axes.
+
+        If ``dims`` (the concrete dimension sizes) is provided, any logical
+        axis whose size does not divide its mesh-axis product is replicated.
+        A mesh axis already consumed by an earlier dim is not reused (the
+        later dim is replicated) — this gives e.g. MoE weights an automatic
+        fallback from expert-parallel to within-expert tensor-parallel when
+        the expert count does not divide the "model" axis.
+        """
+        if isinstance(logical, str):  # SCALAR marker
+            return P()
+        entries = []
+        used: set[str] = set()
+        for i, name in enumerate(logical):
+            if name is None:
+                entries.append(None)
+                continue
+            ax = self.rules.get(name)
+            if ax is None:
+                entries.append(None)
+                continue
+            ax_t = (ax,) if isinstance(ax, str) else tuple(ax)
+            if any(a in used for a in ax_t):
+                entries.append(None)
+                continue
+            if dims is not None:
+                size = dims[i]
+                if size % _axis_size(self.mesh, ax) != 0:
+                    entries.append(None)
+                    continue
+            used.update(ax_t)
+            entries.append(ax)
+        return P(*entries)
+
+    def named(self, logical: Sequence[str | None], dims: Sequence[int] | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, dims))
+
+    def data_axes(self) -> tuple[str, ...]:
+        ax = self.rules[BATCH]
+        return (ax,) if isinstance(ax, str) else tuple(ax)
+
+
+def logical_to_sharding(tree_logical, tree_shapes, rules: ShardingRules):
+    """Map a pytree of logical-axis tuples (+ matching ShapeDtypeStructs)
+    to a pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda logical, sds: rules.named(logical, sds.shape),
+        tree_logical,
+        tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def constrain(x, rules: ShardingRules, logical: Sequence[str | None]):
+    """with_sharding_constraint by logical axes (no-op outside a mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.named(logical, x.shape))
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests and benches must see exactly the real host device count (1), not the
+# dry-run's 512 placeholder devices — do NOT set XLA_FLAGS here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

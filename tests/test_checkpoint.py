@@ -1,0 +1,35 @@
+"""Checkpoint store: save/load roundtrip over nested pytrees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                   "c": (jnp.zeros((2, 2)), jnp.asarray(3, jnp.int32))},
+    }
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out = load_pytree(path, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs import get_smoke_config
+    from repro.models.registry import build_model
+    model = build_model(get_smoke_config("llama3.2-1b"))
+    params = model.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "model.npz")
+    save_pytree(path, params)
+    out = load_pytree(path, model.param_shapes())
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

@@ -1,0 +1,56 @@
+"""lambda_ij (paper Sec. III): hand-constructed geometry + trust gating."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dissimilarity as D
+from repro.core import trust as T
+
+
+def test_lambda_pair_counts_far_trusted_clusters():
+    # receiver centroids at origin-ish; transmitter has 1 near + 2 far
+    ci = jnp.asarray([[0.0, 0.0], [1.0, 0.0]])
+    cj = jnp.asarray([[0.5, 0.0],    # near both -> not counted
+                      [10.0, 0.0],   # far from both -> counted
+                      [0.0, 10.0]])  # far from both -> counted
+    trust_col = jnp.asarray([1, 1, 1])
+    lam = D.lambda_pair(ci, cj, trust_col, beta=5.0)
+    assert int(lam) == 2
+
+
+def test_trust_gates_lambda():
+    ci = jnp.asarray([[0.0, 0.0]])
+    cj = jnp.asarray([[10.0, 0.0], [0.0, 10.0]])
+    lam_full = D.lambda_pair(ci, cj, jnp.asarray([1, 1]), beta=5.0)
+    lam_gated = D.lambda_pair(ci, cj, jnp.asarray([0, 1]), beta=5.0)
+    assert int(lam_full) == 2 and int(lam_gated) == 1
+
+
+def test_cluster_far_from_only_some_receiver_clusters_not_counted():
+    """lambda_ij_m == k_i is required: cluster near ANY receiver centroid
+    doesn't count (paper's indicator 1[lambda_ijm = k_i])."""
+    ci = jnp.asarray([[0.0, 0.0], [8.0, 0.0]])
+    cj = jnp.asarray([[8.5, 0.0]])  # far from c_i[0], near c_i[1]
+    lam = D.lambda_pair(ci, cj, jnp.asarray([1]), beta=5.0)
+    assert int(lam) == 0
+
+
+def test_lambda_matrix_diagonal_zero_and_shape():
+    cents = [jnp.zeros((3, 2)), jnp.ones((3, 2)) * 10, jnp.ones((3, 2)) * 20]
+    trust = T.full_trust(3, 3)
+    lam = D.lambda_matrix(cents, trust, beta=5.0)
+    assert lam.shape == (3, 3)
+    assert np.all(np.diag(np.asarray(lam)) == 0)
+    # identical centroids within each client: all 3 far clusters count
+    assert int(lam[0, 1]) == 3 and int(lam[1, 0]) == 3
+
+
+def test_identical_datasets_zero_lambda():
+    cents = [jnp.ones((2, 4)), jnp.ones((2, 4))]
+    lam = D.lambda_matrix(cents, T.full_trust(2, 2), beta=1.0)
+    assert int(lam[0, 1]) == 0 and int(lam[1, 0]) == 0
+
+
+def test_median_heuristic_positive():
+    cents = [jnp.zeros((2, 3)), jnp.ones((2, 3))]
+    beta = D.median_heuristic_beta(cents)
+    assert beta > 0.0

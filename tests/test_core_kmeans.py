@@ -1,0 +1,56 @@
+"""K-means++: recovers planted clusters; inertia decreases; seeding spread."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans as KM
+
+
+def _blobs(key, k=4, n=60, d=8, sep=8.0):
+    kc, kn = jax.random.split(key)
+    centers = jax.random.normal(kc, (k, d)) * sep
+    pts = centers[jnp.repeat(jnp.arange(k), n)] + \
+        jax.random.normal(kn, (k * n, d))
+    return pts, centers
+
+
+def test_recovers_planted_clusters():
+    x, true_c = _blobs(jax.random.PRNGKey(0))
+    res = KM.kmeans(jax.random.PRNGKey(1), x, 4, n_iters=30)
+    # each found centroid close to one true center (Hungarian-free check)
+    d = np.linalg.norm(np.asarray(res.centroids)[:, None]
+                       - np.asarray(true_c)[None], axis=-1)
+    assert (d.min(axis=1) < 1.5).all()
+    assert len(set(d.argmin(axis=1))) == 4  # bijective matching
+
+
+def test_inertia_decreases_with_k():
+    x, _ = _blobs(jax.random.PRNGKey(2))
+    inertias = [float(KM.kmeans(jax.random.PRNGKey(3), x, k).inertia)
+                for k in (1, 2, 4)]
+    assert inertias[0] > inertias[1] > inertias[2]
+
+
+def test_lloyd_step_never_increases_inertia():
+    x, _ = _blobs(jax.random.PRNGKey(4), k=3)
+    c = KM.kmeans_plus_plus_init(jax.random.PRNGKey(5), x, 3)
+    prev = np.inf
+    for _ in range(6):
+        c, _, inertia = KM.lloyd_step(x, c)
+        assert float(inertia) <= prev + 1e-3
+        prev = float(inertia)
+
+
+def test_plus_plus_seeding_spreads():
+    """k-means++ seeds land in distinct planted blobs (w.h.p. at sep=12)."""
+    x, true_c = _blobs(jax.random.PRNGKey(6), k=4, sep=12.0)
+    seeds = KM.kmeans_plus_plus_init(jax.random.PRNGKey(7), x, 4)
+    d = np.linalg.norm(np.asarray(seeds)[:, None] - np.asarray(true_c)[None],
+                       axis=-1)
+    assert len(set(d.argmin(axis=1))) == 4
+
+
+def test_elbow_prefers_true_k():
+    x, _ = _blobs(jax.random.PRNGKey(8), k=3, sep=12.0)
+    k = KM.wcss_elbow(jax.random.PRNGKey(9), x, [1, 2, 3, 4, 5, 6])
+    assert k == 3

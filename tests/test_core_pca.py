@@ -1,0 +1,66 @@
+"""PCA: orthonormality, variance ordering, federated == pooled."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pca as P
+
+
+def _data(key, n=200, d=12):
+    # anisotropic gaussian so PCA directions are well defined
+    scales = jnp.linspace(5.0, 0.1, d)
+    return jax.random.normal(key, (n, d)) * scales + 3.0
+
+
+def test_components_orthonormal():
+    p = P.fit_pca(_data(jax.random.PRNGKey(0)), 5)
+    gram = p.components.T @ p.components
+    np.testing.assert_allclose(np.asarray(gram), np.eye(5), atol=1e-4)
+
+
+def test_explained_variance_descending():
+    p = P.fit_pca(_data(jax.random.PRNGKey(1)), 6)
+    ev = np.asarray(p.explained_var)
+    assert np.all(np.diff(ev) <= 1e-5)
+
+
+def test_transform_centers_data():
+    x = _data(jax.random.PRNGKey(2))
+    p = P.fit_pca(x, 4)
+    z = p.transform(x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(z, 0)), 0.0, atol=1e-3)
+
+
+def test_federated_equals_pooled():
+    key = jax.random.PRNGKey(3)
+    xs = [_data(jax.random.fold_in(key, i), n=80) for i in range(4)]
+    p_fed = P.fit_pca_federated(xs, 5)
+    p_pool = P.fit_pca(jnp.concatenate(xs), 5)
+    np.testing.assert_allclose(np.asarray(p_fed.mean), np.asarray(p_pool.mean),
+                               atol=1e-4)
+    # components may differ by sign
+    dots = np.abs(np.sum(np.asarray(p_fed.components)
+                         * np.asarray(p_pool.components), axis=0))
+    np.testing.assert_allclose(dots, 1.0, atol=1e-3)
+
+
+def test_reconstruction_improves_with_components():
+    x = _data(jax.random.PRNGKey(4))
+    errs = []
+    for k in (1, 4, 8):
+        p = P.fit_pca(x, k)
+        err = float(jnp.mean(jnp.square(p.inverse(p.transform(x)) - x)))
+        errs.append(err)
+    assert errs[0] > errs[1] > errs[2]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), k=st.integers(1, 6))
+def test_property_projection_idempotent(seed, k):
+    x = _data(jax.random.PRNGKey(seed), n=60, d=10)
+    p = P.fit_pca(x, k)
+    xr = p.inverse(p.transform(x))
+    xrr = p.inverse(p.transform(xr))
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(xrr),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,82 @@
+"""Data substrate: synthetic generators + partitioners + token topics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import partition_by_classes
+from repro.data.synthetic import (cifar_like, fmnist_like,
+                                  fmnist_like_split, make_image_dataset)
+from repro.data.tokens import make_client_token_data, topic_token_batch
+
+
+def test_image_dataset_shapes_and_range():
+    ds = fmnist_like(jax.random.PRNGKey(0), n_per_class=20)
+    assert ds.images.shape == (200, 28, 28, 1)
+    assert ds.labels.shape == (200,)
+    assert float(ds.images.min()) >= 0.0 and float(ds.images.max()) <= 1.0
+    ds = cifar_like(jax.random.PRNGKey(1), n_per_class=10)
+    assert ds.images.shape == (100, 32, 32, 3)
+
+
+def test_classes_are_distinguishable():
+    """Within-class pixel distance << between-class distance."""
+    ds = fmnist_like(jax.random.PRNGKey(2), n_per_class=30)
+    x = np.asarray(ds.images).reshape(300, -1)
+    y = np.asarray(ds.labels)
+    within, between = [], []
+    for c in range(3):
+        xc = x[y == c]
+        xo = x[y == (c + 1) % 10]
+        within.append(np.linalg.norm(xc[0] - xc[1:6], axis=1).mean())
+        between.append(np.linalg.norm(xc[0] - xo[:5], axis=1).mean())
+    assert np.mean(between) > 1.3 * np.mean(within)
+
+
+def test_split_shares_prototypes():
+    tr, ev = fmnist_like_split(jax.random.PRNGKey(3), 50, 10)
+    assert tr.images.shape[0] == 500 and ev.images.shape[0] == 100
+    # class means of train and eval nearly coincide (same prototypes)
+    xt = np.asarray(tr.images).reshape(500, -1)
+    xe = np.asarray(ev.images).reshape(100, -1)
+    yt, ye = np.asarray(tr.labels), np.asarray(ev.labels)
+    for c in range(10):
+        d = np.linalg.norm(xt[yt == c].mean(0) - xe[ye == c].mean(0))
+        other = np.linalg.norm(xt[yt == c].mean(0)
+                               - xe[ye == (c + 1) % 10].mean(0))
+        assert d < other
+
+
+def test_partition_circular_domains():
+    ds = fmnist_like(jax.random.PRNGKey(4), n_per_class=30)
+    xs, ys, doms = partition_by_classes(0, ds.images, ds.labels,
+                                        n_clients=10, classes_per_client=3,
+                                        circular=True)
+    assert doms[0] == [9, 0, 1] and doms[5] == [4, 5, 6]
+    for x, y, dom in zip(xs, ys, doms):
+        assert set(np.unique(np.asarray(y))) <= set(dom)
+        assert x.shape[0] == y.shape[0] > 0
+
+
+def test_partition_random_domains_have_k_classes():
+    ds = fmnist_like(jax.random.PRNGKey(5), n_per_class=40)
+    xs, ys, doms = partition_by_classes(1, ds.images, ds.labels,
+                                        n_clients=6, classes_per_client=3)
+    for y, dom in zip(ys, doms):
+        assert len(dom) == 3
+        assert set(np.unique(np.asarray(y))) <= set(dom)
+
+
+def test_topic_tokens_biased():
+    toks = topic_token_batch(jax.random.PRNGKey(6), batch=8, seq_len=128,
+                             vocab=800, topic=2, n_topics=8, p_topic=0.9)
+    t = np.asarray(toks)
+    frac_in_topic = np.mean((t >= 200) & (t < 300))
+    assert frac_in_topic > 0.8
+
+
+def test_client_token_data_domains():
+    ds, doms = make_client_token_data(jax.random.PRNGKey(7), n_clients=4,
+                                      n_seqs=8, seq_len=32, vocab=800)
+    assert len(ds) == 4 and ds[0].shape == (8, 32)
+    assert doms[0] != doms[2]

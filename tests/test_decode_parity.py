@@ -1,0 +1,67 @@
+"""Serving correctness: prefill(t[:n]) then decode(t[n:]) must reproduce the
+full-sequence forward logits for every architecture family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as tf
+from repro.models.registry import build_model
+
+# one representative per family (full 10-arch sweep lives in smoke tests)
+FAMILIES = ["llama3.2-1b", "phi3.5-moe-42b-a6.6b", "xlstm-125m",
+            "recurrentgemma-2b", "musicgen-medium"]
+
+
+def _logits_full(model, params, tokens, cfg):
+    """Teacher-forced logits at every position via prefill of prefixes is
+    O(S^2); instead run forward_train's stack directly."""
+    batch = ({"codes": tokens} if cfg.frontend == "audio_codec"
+             else {"tokens": tokens})
+    x, positions, _ = tf.embed_inputs(params, batch, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    pos = jnp.zeros((), jnp.int32)
+    x, aux, _, _ = tf._run_stack(params, None, x, cfg, positions,
+                                 mode="train", seq_len=x.shape[1], pos=pos,
+                                 aux=aux)
+    return tf.logits_from_hidden(params, x, cfg)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_prefill_plus_decode_matches_full(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.is_moe:
+        # token-dropping depends on batch composition; raise capacity so
+        # routing is identical between prefill and decode
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s, n_pre = 2, 24, 16
+    key = jax.random.PRNGKey(1)
+    if cfg.frontend == "audio_codec":
+        tokens = jax.random.randint(key, (b, s, cfg.n_codebooks), 0,
+                                    cfg.vocab_size)
+        pre_batch = {"codes": tokens[:, :n_pre]}
+        step_batch = lambda t: {"codes": tokens[:, t:t+1]}
+    else:
+        tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+        pre_batch = {"tokens": tokens[:, :n_pre]}
+        step_batch = lambda t: {"token": tokens[:, t:t+1]}
+
+    full = _logits_full(model, params, tokens, cfg)
+
+    logits, cache = model.prefill(params, pre_batch, max_len=s)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], np.float32),
+        np.asarray(full[:, n_pre - 1], np.float32), rtol=2e-2, atol=2e-2)
+
+    decode = jax.jit(lambda p, c, bt: model.decode(p, c, bt))
+    for t in range(n_pre, s):
+        logits, cache = decode(params, cache, step_batch(t))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full[:, t], np.float32), rtol=2e-2, atol=2e-2,
+            err_msg=f"{arch} step {t}")

@@ -1,0 +1,54 @@
+"""Host-mesh proxy for the multi-pod dry-run: every step kind of a reduced
+arch lowers + compiles against a real (1-device) mesh with the production
+sharding rules.  The full 512-device sweep runs via repro.launch.dryrun."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_smoke_config
+from repro.launch import specs as sp
+from repro.launch.dryrun import build_lowerable, lower_and_compile
+from repro.launch.mesh import make_host_mesh
+from repro.sharding import ShardingRules
+
+
+def _tiny_shape(name):
+    base = INPUT_SHAPES[name]
+    return dataclasses.replace(base, seq_len=64, global_batch=2)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "phi3.5-moe-42b-a6.6b",
+                                  "xlstm-125m", "recurrentgemma-2b",
+                                  "qwen2-vl-72b", "musicgen-medium"])
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k",
+                                        "decode_32k"])
+def test_host_mesh_lower_compile(arch, shape_name):
+    shape = _tiny_shape(shape_name)
+    cfg = sp.shape_config(get_smoke_config(arch), shape)
+    mesh = make_host_mesh()
+    rec, compiled = lower_and_compile(cfg, shape, mesh)
+    assert rec["cost"].get("flops", 0) > 0
+    assert compiled is not None
+
+
+def test_long_500k_switches_to_sliding_window():
+    shape = INPUT_SHAPES["long_500k"]
+    cfg = sp.shape_config(get_smoke_config("llama3-8b"), shape)
+    assert cfg.attention == "sliding"
+    cfg2 = sp.shape_config(get_smoke_config("xlstm-125m"), shape)
+    assert cfg2.attention != "sliding"  # SSM needs no window
+
+
+def test_input_specs_shapes():
+    from repro.configs import get_config
+    cfg = get_config("qwen2-vl-72b")
+    shape = INPUT_SHAPES["train_4k"]
+    specs, logical = sp.input_specs(cfg, shape)
+    n_img = sp.VLM_IMG_TOKENS
+    assert specs["embeds"].shape == (256, n_img, cfg.frontend_dim)
+    assert specs["tokens"].shape == (256, 4096 - n_img)
+    assert specs["labels"].shape == (256, 4096)
+    cfg = get_config("musicgen-medium")
+    specs, _ = sp.input_specs(cfg, INPUT_SHAPES["decode_32k"])
+    assert specs["codes"].shape == (128, 1, 4)

@@ -1,0 +1,67 @@
+"""Pallas flash-attention kernel vs oracle: sweep shapes / dtypes / windows /
+GQA ratios (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _qkv(key, b, s, lk, h, kv, hd, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, s, h, hd)).astype(dtype)
+    k = jax.random.normal(k2, (b, lk, kv, hd)).astype(dtype)
+    v = jax.random.normal(k3, (b, lk, kv, hd)).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,block", [(64, 32), (128, 64), (96, 32)])
+@pytest.mark.parametrize("h,kv", [(4, 4), (8, 2), (8, 1)])
+def test_causal_sweep(s, block, h, kv):
+    q, k, v = _qkv(jax.random.PRNGKey(s + h), 2, s, s, h, kv, 64)
+    o1 = ops.flash_attention(q, k, v, causal=True, use_pallas=True,
+                             block_q=block, block_k=block)
+    o2 = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [8, 32, 100])
+def test_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(window), 1, 128, 128, 4, 2, 32)
+    o1 = ops.flash_attention(q, k, v, causal=True, window=window,
+                             use_pallas=True, block_q=32, block_k=32)
+    o2 = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3), (jnp.bfloat16, 3e-2)])
+def test_dtypes(dtype, tol):
+    q, k, v = _qkv(jax.random.PRNGKey(7), 2, 64, 64, 4, 2, 64, dtype)
+    o1 = ops.flash_attention(q, k, v, causal=True, use_pallas=True,
+                             block_q=32, block_k=32)
+    o2 = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=tol, atol=tol)
+
+
+def test_q_offset_chunked_prefill():
+    # attending with q offset against a longer KV prefix
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 32, 128, 4, 4, 32)
+    o1 = ops.flash_attention(q, k, v, causal=True, q_offset=96,
+                             use_pallas=True, block_q=32, block_k=32)
+    o2 = ref.flash_attention_ref(q, k, v, causal=True, q_offset=96)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_padding_unaligned_seq():
+    # 100 is not a multiple of the 32-blocks: ops must pad and un-pad
+    q, k, v = _qkv(jax.random.PRNGKey(5), 1, 100, 100, 2, 2, 32)
+    o1 = ops.flash_attention(q, k, v, causal=True, use_pallas=True,
+                             block_q=32, block_k=32)
+    o2 = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-3, atol=2e-3)

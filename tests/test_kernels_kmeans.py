@@ -1,0 +1,68 @@
+"""Pallas kmeans_assign kernel vs the pure-jnp oracle: shape/dtype sweep +
+hypothesis property tests (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
+
+
+@pytest.mark.parametrize("n", [8, 100, 1000])
+@pytest.mark.parametrize("d", [3, 32, 130])
+@pytest.mark.parametrize("k", [2, 7, 16])
+def test_kernel_matches_oracle_shapes(n, d, k):
+    kx, kc = jax.random.split(jax.random.PRNGKey(n * 1000 + d * 10 + k))
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    c = jax.random.normal(kc, (k, d), jnp.float32)
+    a1, d1 = ops.kmeans_assign(x, c, use_pallas=True)
+    a2, d2 = ref.kmeans_assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    kx, kc = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (256, 64)).astype(dtype)
+    c = jax.random.normal(kc, (5, 64)).astype(dtype)
+    a1, _ = ops.kmeans_assign(x, c, use_pallas=True)
+    a2, _ = ref.kmeans_assign_ref(x, c)
+    # bf16 ties can flip; demand >= 99% agreement for bf16, exact for f32
+    agree = np.mean(np.asarray(a1) == np.asarray(a2))
+    assert agree >= (0.99 if dtype == jnp.bfloat16 else 1.0)
+
+
+def test_padded_centroids_never_win():
+    # k=3 padded to 8 inside ops wrapper: padding must never be selected
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 10))
+    c = jax.random.normal(jax.random.PRNGKey(2), (3, 10))
+    a, _ = ops.kmeans_assign(x, c, use_pallas=True)
+    assert int(jnp.max(a)) < 3
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 64),
+    d=st.integers(1, 24),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_property_assignment_is_argmin(n, d, k, seed):
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, d))
+    c = jax.random.normal(kc, (k, d))
+    a, md = ops.kmeans_assign(x, c, use_pallas=True)
+    d2 = np.sum((np.asarray(x)[:, None] - np.asarray(c)[None]) ** 2, -1)
+    np.testing.assert_array_equal(np.asarray(a), d2.argmin(1))
+    np.testing.assert_allclose(np.asarray(md), d2.min(1), rtol=1e-3, atol=1e-4)
+
+
+def test_oracle_distances_nonnegative():
+    x = jnp.ones((16, 4)) * 1e3
+    c = jnp.ones((2, 4)) * 1e3
+    _, d2 = ref.kmeans_assign_ref(x, c)
+    assert bool(jnp.all(d2 >= 0.0))

@@ -1,0 +1,70 @@
+"""Roofline machinery: HLO collective parsing, extrapolation, terms."""
+import pytest
+
+from repro import roofline as rl
+
+
+HLO = """
+ENTRY %main {
+  %ag.1 = f32[128,256]{1,0} all-gather(f32[8,256] %x), dimensions={0}
+  %ar.2 = bf16[64]{0} all-reduce(bf16[64] %y), to_apply=%sum
+  %rs.3 = f32[16,16]{1,0} reduce-scatter(f32[256,16] %z), dimensions={0}
+  %ags.4 = (f32[32]{0}, f32[32]{0}) all-gather-start(f32[2] %w)
+  %agd.5 = f32[32]{0} all-gather-done((f32[32], f32[32]) %ags.4)
+  %a2a.6 = s32[8,8]{1,0} all-to-all(s32[8,8] %q)
+  %cp.7 = bf16[4,4]{1,0} collective-permute(bf16[4,4] %r)
+  %dot.8 = f32[8,8]{1,0} dot(f32[8,2] %a, f32[2,8] %b)
+}
+"""
+
+
+def test_parse_collective_bytes():
+    out = rl.parse_collective_bytes(HLO)
+    assert out["all-gather"] == 128 * 256 * 4 + 2 * 32 * 4  # incl. -start pair
+    assert out["all-reduce"] == 64 * 2
+    assert out["reduce-scatter"] == 16 * 16 * 4
+    assert out["all-to-all"] == 8 * 8 * 4
+    assert out["collective-permute"] == 4 * 4 * 2
+
+
+def test_parse_ignores_done_and_noncollectives():
+    out = rl.parse_collective_bytes(
+        "%d = f32[9] all-gather-done(f32[9] %s)\n"
+        "%m = f32[4,4] dot(f32[4,4] %a, f32[4,4] %b)\n")
+    assert sum(out.values()) == 0
+
+
+def test_shape_bytes_dtypes():
+    assert rl._shape_bytes("bf16[2,3]") == 12
+    assert rl._shape_bytes("f32[10]") == 40
+    assert rl._shape_bytes("pred[8]") == 8
+    assert rl._shape_bytes("(f32[2], s8[4])") == 12
+
+
+def test_extrapolate_linear():
+    c1 = {"flops": 10.0, "bytes": 100.0}
+    c2 = {"flops": 14.0, "bytes": 130.0}
+    out = rl.extrapolate(c1, c2, 5)  # c1 + 4*delta
+    assert out["flops"] == 10 + 4 * 4
+    assert out["bytes"] == 100 + 4 * 30
+
+
+def test_terms_and_bottleneck():
+    t = rl.RooflineTerms(flops=197e12 * 256, bytes_hbm=819e9 * 256 * 2,
+                         bytes_collective=50e9 * 256 * 0.5, chips=256,
+                         model_flops=197e12 * 128)
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.t_memory == pytest.approx(2.0)
+    assert t.t_collective == pytest.approx(0.5)
+    assert t.bottleneck == "memory"
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_excludes_embedding():
+    from repro.configs import get_config, INPUT_SHAPES
+    cfg = get_config("llama3.2-1b")
+    shape = INPUT_SHAPES["train_4k"]
+    n = 10_000_000 + cfg.vocab_size * cfg.d_model
+    f = rl.model_flops(cfg, n, shape, backward=True)
+    tokens = shape.global_batch * shape.seq_len
+    assert f >= 6 * 10_000_000 * tokens  # embed excluded, attention adds

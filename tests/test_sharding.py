@@ -1,0 +1,68 @@
+"""Sharding rules: divisibility fallback, axis dedupe, scalar marker."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as sh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # all CPU devices in a (1, n) data/model mesh
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def test_basic_spec(mesh):
+    rules = sh.ShardingRules.default(mesh)
+    spec = rules.spec((sh.D_MODEL, sh.D_FF))
+    assert spec == P(("data",), "model")
+
+
+def test_divisibility_fallback():
+    # use a fake 16-wide model axis via an abstract mesh (no devices needed
+    # beyond 1: AbstractMesh carries only shape/axis metadata)
+    amesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    rules = sh.ShardingRules.default(amesh)
+    spec = rules.spec((sh.D_MODEL, sh.D_FF), dims=(32, 49))
+    assert spec[1] is None  # d_ff=49 not divisible by 16 -> replicated
+    spec = rules.spec((sh.D_MODEL, sh.D_FF), dims=(32, 64))
+    assert spec[1] == "model"
+
+
+def test_axis_dedupe_moe_fallback():
+    """EXPERTS and D_FF both map to "model": the second use is dropped."""
+    amesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    rules = sh.ShardingRules.default(amesh)
+    spec = rules.spec((sh.EXPERTS, sh.D_MODEL, sh.D_FF), dims=(64, 32, 32))
+    assert spec == P("model", ("data",), None)
+    # experts NOT divisible (qwen2-moe's 60) -> within-expert TP instead
+    spec2 = rules.spec((sh.EXPERTS, sh.D_MODEL, sh.D_FF), dims=(60, 32, 32))
+    assert spec2 == P(None, ("data",), "model")
+
+
+def test_scalar_marker(mesh):
+    rules = sh.ShardingRules.default(mesh)
+    assert rules.spec(sh.SCALAR) == P()
+
+
+def test_stack_axis_never_sharded(mesh):
+    rules = sh.ShardingRules.default(mesh)
+    spec = rules.spec((sh.STACK, sh.D_MODEL, sh.D_FF))
+    assert spec[0] is None
+
+
+def test_batch_spec(mesh):
+    rules = sh.ShardingRules.default(mesh)
+    assert rules.spec((sh.BATCH, None)) == P(("data",), None)
+
+
+def test_multi_pod_rules():
+    devs = np.array(jax.devices())
+    if devs.size < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((1, 1, devs.size), ("pod", "data", "model"))
+    rules = sh.ShardingRules.default(mesh)
+    assert rules.spec((sh.BATCH, None)) == P(("pod", "data"), None)
+    assert rules.data_axes() == ("pod", "data")

@@ -1,0 +1,75 @@
+"""End-to-end behaviour: the full paper pipeline (PCA -> K-means++ -> RL
+graph -> AE-gated exchange -> FL) improves over the non-i.i.d. baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.qlearning import RLConfig
+from repro.data import partition_by_classes
+from repro.data.synthetic import fmnist_like_split
+from repro.fl import FLConfig, fl_train
+from repro.models.autoencoder import AEConfig
+
+AE_CFG = AEConfig(28, 28, 1, widths=(8, 16), latent_dim=16)
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(0)
+    ds, ev = fmnist_like_split(key, n_train_per_class=80, n_eval_per_class=15)
+    xs, ys, _ = partition_by_classes(0, ds.images, ds.labels, n_clients=8,
+                                     classes_per_client=3, circular=True)
+    return key, xs, ys, ev
+
+
+@pytest.fixture(scope="module")
+def pipeline_result(world):
+    key, xs, ys, ev = world
+    cfg = PipelineConfig(rl=RLConfig(n_episodes=300, buffer_size=50))
+    return run_pipeline(key, xs, ys, AE_CFG, cfg)
+
+
+def test_exchange_reduces_dissimilarity(pipeline_result):
+    """Paper Fig. 3: mean lambda drops after D2D."""
+    res = pipeline_result
+    assert float(res.lam_after.mean()) < float(res.lam_before.mean())
+
+
+def test_rl_links_beat_uniform_on_failure_prob(world, pipeline_result):
+    """Paper Fig. 4: RL-chosen links have lower mean P_D than uniform."""
+    key, xs, *_ = world
+    res = pipeline_result
+    n = len(xs)
+    pf = np.asarray(res.p_fail)
+    rl_cost = pf[np.arange(n), np.asarray(res.in_edge)].mean()
+    rng = np.random.default_rng(0)
+    uni_costs = []
+    for _ in range(200):
+        g = (np.arange(n) + rng.integers(1, n, n)) % n
+        uni_costs.append(pf[np.arange(n), g].mean())
+    assert rl_cost <= np.mean(uni_costs)
+
+
+def test_exchange_moves_data_and_preserves_senders(pipeline_result, world):
+    _, xs, *_ = world
+    res = pipeline_result
+    assert sum(res.moved_counts) > 0
+    for before, after in zip(xs, res.datasets):
+        assert after.shape[0] >= before.shape[0]  # copies, never removal
+
+
+def test_smart_exchange_beats_no_exchange(world, pipeline_result):
+    """Paper Fig. 5 (reduced): FL on exchanged data converges to a lower
+    reconstruction loss than FL on the raw non-i.i.d. partitions."""
+    key, xs, ys, ev = world
+    res = pipeline_result
+    fl_cfg = FLConfig(total_iters=150, tau_a=10, eval_every=150,
+                      batch_size=32)
+    r_noex = fl_train(jax.random.PRNGKey(5), xs, AE_CFG, fl_cfg, ev.images)
+    r_smart = fl_train(jax.random.PRNGKey(5), res.datasets, AE_CFG, fl_cfg,
+                       ev.images)
+    # smart exchange should not be worse (strict improvement shows at longer
+    # horizons; see benchmarks/fig5_convergence for the full-length run)
+    assert r_smart.eval_loss[-1] <= r_noex.eval_loss[-1] * 1.05

@@ -1,0 +1,117 @@
+"""Backbone edge cases: M-RoPE, VLM token/patch concat, audio codebooks,
+sliding-window config specialisation, remat equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as tf
+from repro.models.registry import build_model
+from repro.models.rope import apply_mrope, apply_rope
+
+
+def test_mrope_equals_rope_on_text():
+    """With t=h=w positions, M-RoPE must reduce to standard RoPE."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 10, 4, 64))
+    pos = jnp.broadcast_to(jnp.arange(10)[None], (2, 10))
+    pos3 = jnp.broadcast_to(pos[..., None], (2, 10, 3))
+    a = apply_rope(x, pos, 10_000.0)
+    b = apply_mrope(x, pos3, 10_000.0, (8, 12, 12))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mrope_distinct_streams_differ():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (1, 8, 2, 64))
+    pos3 = jnp.stack([jnp.arange(8), jnp.arange(8) * 2, jnp.arange(8) * 3],
+                     axis=-1)[None]
+    same = jnp.broadcast_to(jnp.arange(8)[None, :, None], (1, 8, 3))
+    a = apply_mrope(x, pos3, 1e4, (8, 12, 12))
+    b = apply_mrope(x, same, 1e4, (8, 12, 12))
+    assert float(jnp.max(jnp.abs(a - b))) > 1e-3
+
+
+def test_vlm_concat_lengths():
+    cfg = get_smoke_config("qwen2-vl-72b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, n_img, n_txt = 2, 6, 10
+    batch = {
+        "embeds": jax.random.normal(jax.random.PRNGKey(1),
+                                    (b, n_img, cfg.frontend_dim)),
+        "tokens": jnp.zeros((b, n_txt), jnp.int32),
+    }
+    x, positions, _ = tf.embed_inputs(params, batch, cfg)
+    assert x.shape == (b, n_img + n_txt, cfg.d_model)
+    assert positions.shape == (b, n_img + n_txt, 3)
+
+
+def test_audio_embeds_sum_codebooks():
+    cfg = get_smoke_config("musicgen-medium")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    codes = jnp.zeros((1, 5, cfg.n_codebooks), jnp.int32)
+    x, _, _ = tf.embed_inputs(params, {"codes": codes}, cfg)
+    # all codes 0: embedding = sum of first rows of each codebook table
+    expected = sum(params["embed"]["tok"][q][0]
+                   for q in range(cfg.n_codebooks)).astype(x.dtype)
+    np.testing.assert_allclose(np.asarray(x[0, 0], np.float32),
+                               np.asarray(expected, np.float32),
+                               rtol=1e-2, atol=1e-3)
+
+
+def test_remat_matches_no_remat():
+    cfg = get_smoke_config("llama3.2-1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": t, "labels": t}
+    l1, _ = model.loss_fn(params, batch, remat=False)
+    l2, _ = model.loss_fn(params, batch, remat=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    g1 = jax.grad(lambda p: model.loss_fn(p, batch, remat=False)[0])(params)
+    g2 = jax.grad(lambda p: model.loss_fn(p, batch, remat=True)[0])(params)
+    # bf16 forward recompute reorders roundings: tolerate ~1 bf16 ulp
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_sliding_window_restricts_context():
+    """With window w, logits at position p don't depend on tokens < p-w."""
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"),
+                              attention="sliding", window=4, n_layers=1)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab_size)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 1) % cfg.vocab_size)  # change token 0
+    def logits(t):
+        batch = {"tokens": t, "labels": t}
+        x, positions, _ = tf.embed_inputs(params, batch, cfg)
+        aux = jnp.zeros((), jnp.float32)
+        x, aux, _, _ = tf._run_stack(params, None, x, cfg, positions,
+                                     mode="train", seq_len=12,
+                                     pos=jnp.zeros((), jnp.int32), aux=aux)
+        return tf.logits_from_hidden(params, x, cfg)
+    l1, l2 = logits(t1), logits(t2)
+    # position 11 attends to [8..11]: unaffected by token 0
+    np.testing.assert_allclose(np.asarray(l1[0, 11]), np.asarray(l2[0, 11]),
+                               rtol=1e-4, atol=1e-4)
+    # position 1 IS affected
+    assert float(jnp.max(jnp.abs(l1[0, 1] - l2[0, 1]))) > 1e-4
+
+
+def test_logits_dtype_knob():
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"),
+                              logits_dtype="bfloat16")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    t = jnp.zeros((1, 8), jnp.int32)
+    loss, _ = model.loss_fn(params, {"tokens": t, "labels": t})
+    assert bool(jnp.isfinite(loss))
