@@ -15,8 +15,7 @@ from repro.kernels import ref
 
 
 def _timeit(f, *args, iters=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))   # single warmup call (jit compile)
     t0 = time.time()
     for _ in range(iters):
         out = f(*args)
@@ -46,6 +45,43 @@ def main(quick=True):
     vmem_kib = (512 * hd * 3 + 512 * 512 + 512 * (hd + 2)) * 4 / 1024
     print(f"kernel_flash_attention,{us:.0f},b={b};s={s};h={h};kv={kv};"
           f"hd={hd};vmem_per_step_kib={vmem_kib:.0f}")
+
+    # exchange gate: device-resident batched engine vs the reference
+    # host-side loop plane (one jitted dispatch per (receiver, cluster))
+    from repro.core import exchange as ex
+    from repro.core.trust import full_trust
+    from repro.models.autoencoder import AEConfig
+
+    # dispatch-bound regime (small per-client shards): the loop plane pays
+    # ~N*(K+1) jitted dispatches + host syncs per exchange, the batched
+    # engine one device program.  At FLOP-bound shapes a 1-2 core CPU hides
+    # the difference; on TPU the fused program wins at every shape.
+    n_cl, k_cl, r_res, m_cl, hw = 30, 3, 8, 24, 8
+    ae_cfg = AEConfig(hw, hw, 1, widths=(2, 4), latent_dim=4)
+    kw = jax.random.fold_in(key, 4)
+    ks = jax.random.split(kw, n_cl)
+    datasets = [jax.random.uniform(ks[i], (m_cl, hw, hw, 1))
+                for i in range(n_cl)]
+    labels = [jnp.zeros(m_cl, jnp.int32)] * n_cl
+    assigns = [jax.random.randint(jax.random.fold_in(kw, 100 + i),
+                                  (m_cl,), 0, k_cl) for i in range(n_cl)]
+    trust = full_trust(n_cl, k_cl)
+    in_edge = jnp.asarray([(i + 1) % n_cl for i in range(n_cl)])
+    p_fail = jnp.zeros((n_cl, n_cl))
+    cfg = ex.ExchangeConfig(reserve_per_cluster=r_res)
+    params = ex.pretrain_autoencoders_batched(
+        jax.random.fold_in(kw, 1), datasets, ae_cfg, cfg)
+    run = lambda method: ex.run_exchange(
+        jax.random.fold_in(kw, 2), datasets, labels, assigns, trust,
+        in_edge, p_fail, ae_cfg, cfg, ae_params=params, method=method)
+    us_loop = _timeit(lambda: run("loop"), iters=3) * 1e6
+    us_bat = _timeit(lambda: run("batched"), iters=3) * 1e6
+    # recon-gate kernel step: 2 (R, P) f32 tiles (R, P padded to x8 / x128)
+    vmem_kib = 2 * 8 * 128 * 4 / 1024
+    print(f"exchange_gate,{us_bat:.0f},n={n_cl};k={k_cl};r={r_res};"
+          f"m={m_cl};hw={hw};loop_us={us_loop:.0f};"
+          f"speedup={us_loop / us_bat:.1f}x;"
+          f"vmem_per_step_kib={vmem_kib:.0f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,61 @@
+"""Client-axis batching utilities shared by the FL trainer and the
+exchange gate engine.
+
+Per-client arrays are ragged (each client holds n_i samples); every batched
+device program in this repo works on one dense stack with a leading client
+axis instead:
+
+  * :func:`stack_clients` pads each client's array to the common max length
+    by cyclic tiling and stacks to (N, max_n, ...) plus the true sizes.
+  * :func:`valid_mask` turns those sizes into a (N, max_n) {0,1} mask so
+    masked reductions are *exact* over the real samples (tiled padding gets
+    zero weight — means/grads match the unpadded per-client computation).
+  * :func:`stack_pytrees` stacks a list of per-client parameter pytrees into
+    one pytree with a leading client axis, ready for ``jax.vmap``.
+
+On a mesh the leading client axis is the natural shard axis ("data");
+aggregations over it lower to all-reduces.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def stack_clients(datasets: Sequence) -> tuple[jax.Array, jax.Array]:
+    """Pad per-client arrays to a common length; returns (data, sizes).
+
+    Padding tiles each client's data cyclically so every row is a real
+    sample (uniform minibatch sampling stays unbiased); use
+    :func:`valid_mask` for reductions that must weight each real sample
+    exactly once.  Assembly happens host-side in numpy — one device
+    transfer for the whole stack instead of ~2N small tile/stack dispatches.
+    """
+    sizes_np = np.asarray([d.shape[0] for d in datasets], np.int32)
+    max_n = int(sizes_np.max())
+    padded = []
+    for d in datasets:
+        d = np.asarray(d)
+        reps = -(-max_n // d.shape[0])
+        tiled = np.tile(d, (reps,) + (1,) * (d.ndim - 1))[:max_n]
+        padded.append(tiled)
+    return jnp.asarray(np.stack(padded)), jnp.asarray(sizes_np)
+
+
+def valid_mask(sizes, max_n: int, dtype=jnp.float32) -> jax.Array:
+    """(N,) sizes -> (N, max_n) mask selecting each client's real samples."""
+    return (jnp.arange(max_n)[None, :] < jnp.asarray(sizes)[:, None]).astype(
+        dtype)
+
+
+def stack_pytrees(trees: Sequence):
+    """[tree_0, ..., tree_{N-1}] -> one tree with a leading client axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_pytree(tree, n: int) -> list:
+    """Inverse of :func:`stack_pytrees`."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]

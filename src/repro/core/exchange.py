@@ -3,24 +3,50 @@
 After graph discovery, each formed link (transmitter j -> receiver i) moves
 data as follows:
 
-  1. j builds per-cluster *reserve* subsets K^{jk}_reserve, only for clusters
-     k that the trust matrix permits (T_j[i, k] = 1).
+  1. j builds per-cluster *reserve* subsets K^{jk}_reserve — a seeded random
+     subset of the cluster's members — only for clusters k that the trust
+     matrix permits (T_j[i, k] = 1).
   2. i scores each reserve subset with its own (pre-trained-one-GD-step)
      autoencoder: if the receiver reconstructs the subset *worse* than its
      own data — L(phi_i, D_i)/|D_i| < L(phi_i, K)/|K| — the subset contains
      information i's model lacks, and the transfer happens.
   3. Optionally the physical channel is sampled: with probability P_D(i, j)
      the transmission fails and nothing moves (straggler/robustness runs).
+
+Two interchangeable data planes implement the gate (``ExchangeConfig.method``
+or the ``method=`` argument of :func:`run_exchange`):
+
+``"batched"`` (default)
+    The device-resident engine.  AE pretraining is vmapped across all N
+    clients in one jit over a padded client stack (exact masked-mean grads,
+    no per-client retrace).  Reserve subsets are assembled into one masked
+    (N, K, R, H, W, C) tensor, gathered receiver-side along the discovered
+    graph, and *all* (receiver, cluster) pairs are scored against all
+    receiver autoencoders in a single jitted vmapped call whose masked
+    reconstruction-MSE tail is a fused Pallas kernel on TPU
+    (``kernels/recon_gate.py``; jnp oracle on CPU).  Channel failures are
+    sampled with ``jax.random`` inside the same program.  Only the final
+    ragged concat of accepted subsets runs on host.
+
+``"loop"``
+    The reference host-side triple loop, one jitted reconstruction-loss
+    dispatch per (receiver, cluster) pair.  Kept for parity testing: both
+    planes derive reserves, channel draws and pretraining keys identically,
+    so gate decisions and ``moved_counts`` match bit-for-bit on a fixed
+    seed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Sequence
+import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import batching
+from repro.kernels import ops
 from repro.models import autoencoder as ae
 
 
@@ -30,6 +56,7 @@ class ExchangeConfig:
     pretrain_steps: int = 1         # paper: one full-batch GD iteration
     pretrain_lr: float = 1e-2
     apply_channel_failure: bool = False
+    method: str = "batched"         # "batched" | "loop"
 
 
 class ExchangeResult(NamedTuple):
@@ -39,8 +66,12 @@ class ExchangeResult(NamedTuple):
     gate_decisions: list      # per-client list of (tx, cluster, accepted)
 
 
+# ---------------------------------------------------------------------------
+# AE pretraining (paper Sec. III-B: one full-batch GD iteration per client)
+# ---------------------------------------------------------------------------
+
 def pretrain_autoencoders(key, datasets, ae_cfg, cfg: ExchangeConfig):
-    """One (or a few) full-batch GD iterations per client (paper Sec. III-B)."""
+    """Reference path: one jitted grad call per client (retraces per shape)."""
     params_list = []
     keys = jax.random.split(key, len(datasets))
     grad_fn = jax.jit(jax.grad(ae.recon_loss), static_argnums=2)
@@ -54,55 +85,236 @@ def pretrain_autoencoders(key, datasets, ae_cfg, cfg: ExchangeConfig):
     return params_list
 
 
-def run_exchange(key, datasets, labels, assignments, trust, in_edge, p_fail,
-                 ae_cfg, cfg: ExchangeConfig = ExchangeConfig(),
-                 ae_params=None) -> ExchangeResult:
-    """Execute Algorithm 2's data-plane step over the discovered graph.
+def pretrain_autoencoders_batched(key, datasets, ae_cfg, cfg: ExchangeConfig):
+    """All N clients in one jit: vmapped init + vmapped masked-mean grads
+    over the padded client stack.  Returns a stacked-params pytree with a
+    leading client axis.  Per-client keys and the masked loss match the
+    reference path's math exactly (padding carries zero weight)."""
+    data, sizes = batching.stack_clients(datasets)
+    n, max_n = data.shape[:2]
+    mask = batching.valid_mask(sizes, max_n)
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: ae.init_ae(k, ae_cfg))(keys)
 
-    datasets/labels: per-client arrays; assignments: per-client (n_i,)
-    cluster ids from K-means; in_edge: (N,) transmitter for each receiver.
+    grad_fn = jax.vmap(
+        lambda p, x, m: jax.grad(ae.masked_recon_loss)(p, x, m, ae_cfg))
+
+    @jax.jit
+    def step(p, x, m):
+        g = grad_fn(p, x, m)
+        return jax.tree.map(lambda pp, gg: pp - cfg.pretrain_lr * gg, p, g)
+
+    for _ in range(cfg.pretrain_steps):
+        params = step(params, data, mask)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing: reserve selection + channel draws (identical in both
+# data planes, so gate decisions are bit-comparable across them)
+# ---------------------------------------------------------------------------
+
+def _select_reserves(key, assignments, n_clusters_list, r: int):
+    """Seeded random reserve subsets, per (transmitter j, cluster m).
+
+    Clusters larger than ``r`` contribute a uniform random subset (sorted,
+    sampled without replacement from the exchange key); smaller clusters
+    contribute all members.  The deterministic-prefix selection this
+    replaces biased reserves toward K-means enumeration order and
+    understated transfer diversity.
     """
-    n = len(datasets)
-    key, kp = jax.random.split(key)
-    if ae_params is None:
-        ae_params = pretrain_autoencoders(kp, datasets, ae_cfg, cfg)
-    mean_loss = jax.jit(ae.recon_loss, static_argnums=2)
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    sel = []
+    for j, assign in enumerate(assignments):
+        a = np.asarray(assign)
+        row = []
+        for m in range(n_clusters_list[j]):
+            idx = np.nonzero(a == m)[0]
+            if idx.size > r:
+                idx = np.sort(rng.choice(idx, size=r, replace=False))
+            row.append(idx)
+        sel.append(row)
+    return sel
 
+
+# ---------------------------------------------------------------------------
+# data planes
+# ---------------------------------------------------------------------------
+
+def _gate_loop(datasets, labels, trust, in_edge, sel, fail_u, p_fail,
+               ae_params, ae_cfg, cfg: ExchangeConfig) -> ExchangeResult:
+    n = len(datasets)
+    mean_loss = jax.jit(ae.recon_loss, static_argnums=2)
     new_data = [np.asarray(d) for d in datasets]
     new_labels = [np.asarray(l) for l in labels]
     moved = np.zeros(n, np.int64)
     decisions = []
-
-    rng = np.random.default_rng(
-        int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    p_fail = np.asarray(p_fail)
 
     for i in range(n):
         j = int(in_edge[i])
         if j == i:
             continue
-        if cfg.apply_channel_failure and rng.random() < float(p_fail[i, j]):
+        if cfg.apply_channel_failure and float(fail_u[i]) < float(p_fail[i, j]):
             decisions.append((i, j, -1, False))
             continue
         base = float(mean_loss(ae_params[i], jnp.asarray(datasets[i]), ae_cfg))
-        assign_j = np.asarray(assignments[j])
         data_j = np.asarray(datasets[j])
         labels_j = np.asarray(labels[j])
-        k_j = trust[j].shape[1]
-        for m in range(k_j):
-            if int(trust[j][i, m]) == 0:
+        tj = np.asarray(trust[j])
+        for m in range(tj.shape[1]):
+            if int(tj[i, m]) == 0:
                 continue  # transmitter does not permit this cluster
-            idx = np.nonzero(assign_j == m)[0]
+            idx = sel[j][m]
             if idx.size == 0:
                 continue
-            take = idx[:cfg.reserve_per_cluster]
-            reserve = jnp.asarray(data_j[take])
+            reserve = jnp.asarray(data_j[idx])
             score = float(mean_loss(ae_params[i], reserve, ae_cfg))
             accepted = base < score   # receiver's AE is *worse* on reserve
             decisions.append((i, j, m, bool(accepted)))
             if accepted:
-                new_data[i] = np.concatenate([new_data[i], data_j[take]])
-                new_labels[i] = np.concatenate([new_labels[i], labels_j[take]])
-                moved[i] += take.size
+                new_data[i] = np.concatenate([new_data[i], data_j[idx]])
+                new_labels[i] = np.concatenate([new_labels[i], labels_j[idx]])
+                moved[i] += idx.size
     return ExchangeResult([jnp.asarray(d) for d in new_data],
                           [jnp.asarray(l) for l in new_labels],
                           moved, decisions)
+
+
+@functools.partial(jax.jit, static_argnums=(9, 10))
+def _gate_scores(params, own, own_mask, cand, cand_mask, allowed, fail_u,
+                 p_fail, in_edge, ae_cfg, apply_channel):
+    """One device program scoring the whole gate.
+
+    params: stacked AE pytree (leading client axis); own: (N, M, H, W, C)
+    padded client stack with own_mask (N, M); cand: (N, K, R, H, W, C)
+    receiver-aligned reserve tensor with cand_mask (N, K, R).
+    Returns (base (N,), scores (N, K), fail (N,), accept (N, K))."""
+    n, max_n = own.shape[:2]
+    k, r = cand.shape[1:3]
+
+    recon = jax.vmap(lambda p, x: ae.reconstruct(p, x, ae_cfg))
+    y_own = recon(params, own)
+    base = ops.recon_gate_score(y_own.reshape(n, max_n, -1),
+                                own.reshape(n, max_n, -1), own_mask)
+
+    cand_flat = cand.reshape((n, k * r) + cand.shape[3:])
+    y_cand = recon(params, cand_flat)
+    scores = ops.recon_gate_score(y_cand.reshape(n, k, r, -1),
+                                  cand.reshape(n, k, r, -1), cand_mask)
+
+    if apply_channel:
+        fail = fail_u < p_fail[jnp.arange(n), in_edge]
+    else:
+        fail = jnp.zeros((n,), bool)
+    accept = allowed & (base[:, None] < scores) & ~fail[:, None]
+    return base, scores, fail, accept
+
+
+def _gate_batched(datasets, labels, trust, in_edge, sel, fail_u, p_fail,
+                  params, ae_cfg, cfg: ExchangeConfig) -> ExchangeResult:
+    n = len(datasets)
+    k_max = max(t.shape[1] for t in trust)
+    r = cfg.reserve_per_cluster
+    data_np = [np.asarray(d) for d in datasets]
+    labels_np = [np.asarray(l) for l in labels]
+    sample_shape = data_np[0].shape[1:]
+
+    # masked per-transmitter reserve tensor, gathered receiver-side
+    res_data = np.zeros((n, k_max, r) + sample_shape, data_np[0].dtype)
+    res_mask = np.zeros((n, k_max, r), np.float32)
+    for j in range(n):
+        for m, idx in enumerate(sel[j]):
+            if idx.size:
+                res_data[j, m, :idx.size] = data_np[j][idx]
+                res_mask[j, m, :idx.size] = 1.0
+    in_edge = np.asarray(in_edge)
+    cand = res_data[in_edge]
+    cand_mask = res_mask[in_edge]
+
+    trust_np = [np.asarray(t) for t in trust]
+    allowed = np.zeros((n, k_max), bool)
+    for i in range(n):
+        j = int(in_edge[i])
+        if j == i:
+            continue
+        allowed[i, :trust_np[j].shape[1]] = trust_np[j][i] != 0
+    allowed &= cand_mask.any(-1)
+
+    own, sizes = batching.stack_clients(datasets)
+    own_mask = batching.valid_mask(sizes, own.shape[1])
+    _, _, fail, accept = _gate_scores(
+        params, own, own_mask, jnp.asarray(cand), jnp.asarray(cand_mask),
+        jnp.asarray(allowed), jnp.asarray(fail_u), jnp.asarray(p_fail),
+        jnp.asarray(in_edge), ae_cfg, cfg.apply_channel_failure)
+    fail = np.asarray(fail)
+    accept = np.asarray(accept)
+
+    # host: ragged concat of accepted subsets, decisions in loop-plane order
+    new_data = list(data_np)
+    new_labels = list(labels_np)
+    moved = np.zeros(n, np.int64)
+    decisions = []
+    for i in range(n):
+        j = int(in_edge[i])
+        if j == i:
+            continue
+        if cfg.apply_channel_failure and fail[i]:
+            decisions.append((i, j, -1, False))
+            continue
+        for m in range(trust_np[j].shape[1]):
+            if int(trust_np[j][i, m]) == 0:
+                continue
+            idx = sel[j][m]
+            if idx.size == 0:
+                continue
+            acc = bool(accept[i, m])
+            decisions.append((i, j, m, acc))
+            if acc:
+                new_data[i] = np.concatenate([new_data[i], data_np[j][idx]])
+                new_labels[i] = np.concatenate(
+                    [new_labels[i], labels_np[j][idx]])
+                moved[i] += idx.size
+    return ExchangeResult([jnp.asarray(d) for d in new_data],
+                          [jnp.asarray(l) for l in new_labels],
+                          moved, decisions)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def run_exchange(key, datasets, labels, assignments, trust, in_edge, p_fail,
+                 ae_cfg, cfg: ExchangeConfig = ExchangeConfig(),
+                 ae_params=None, method: str | None = None) -> ExchangeResult:
+    """Execute Algorithm 2's data-plane step over the discovered graph.
+
+    datasets/labels: per-client arrays; assignments: per-client (n_i,)
+    cluster ids from K-means; in_edge: (N,) transmitter for each receiver.
+    ``method`` (default ``cfg.method``) picks the data plane — see the
+    module docstring.  ``ae_params`` may be a per-client list or a stacked
+    pytree; omitted, it is pretrained here from the exchange key.
+    """
+    method = (method or cfg.method).lower()
+    n = len(datasets)
+    k_pre, k_sel, k_ch = jax.random.split(key, 3)
+    sel = _select_reserves(k_sel, assignments,
+                           [t.shape[1] for t in trust],
+                           cfg.reserve_per_cluster)
+    fail_u = np.asarray(jax.random.uniform(k_ch, (n,)), np.float32)
+
+    if method == "loop":
+        params = ae_params if ae_params is not None else \
+            pretrain_autoencoders(k_pre, datasets, ae_cfg, cfg)
+        if not isinstance(params, (list, tuple)):
+            params = batching.unstack_pytree(params, n)
+        return _gate_loop(datasets, labels, trust, in_edge, sel, fail_u,
+                          p_fail, list(params), ae_cfg, cfg)
+    if method != "batched":
+        raise ValueError(f"unknown exchange method: {method!r}")
+    params = ae_params if ae_params is not None else \
+        pretrain_autoencoders_batched(k_pre, datasets, ae_cfg, cfg)
+    if isinstance(params, (list, tuple)):
+        params = batching.stack_pytrees(list(params))
+    return _gate_batched(datasets, labels, trust, in_edge, sel, fail_u,
+                         p_fail, params, ae_cfg, cfg)

@@ -70,9 +70,13 @@ def cluster_clients(key, datasets, cfg: PipelineConfig):
 
 def run_pipeline(key, datasets, labels, ae_cfg: AEConfig,
                  cfg: PipelineConfig = PipelineConfig(),
-                 in_edge=None) -> PipelineResult:
+                 in_edge=None, exchange_method=None) -> PipelineResult:
     """Full smart-exchange. Pass ``in_edge`` to skip RL (e.g. uniform
-    baseline graphs) while keeping the same exchange machinery."""
+    baseline graphs) while keeping the same exchange machinery.
+
+    ``exchange_method`` overrides ``cfg.exchange.method``: "batched" runs
+    the device-resident gate engine (default), "loop" the reference
+    host-side plane (parity testing) — see ``core/exchange.py``."""
     k_cl, k_tr, k_ch, k_rl, k_ex = jax.random.split(key, 5)
     n = len(datasets)
 
@@ -95,7 +99,8 @@ def run_pipeline(key, datasets, labels, ae_cfg: AEConfig,
                                jnp.zeros((0,)), jnp.zeros((0,)))
 
     res = ex.run_exchange(k_ex, datasets, labels, assigns, trust, in_edge,
-                          p_fail, ae_cfg, cfg.exchange)
+                          p_fail, ae_cfg, cfg.exchange,
+                          method=exchange_method)
 
     # Recompute dissimilarity on the post-exchange datasets (paper Fig. 3).
     _, cents_after, _ = cluster_clients(k_cl, res.datasets, cfg)

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batching import stack_clients  # noqa: F401  (re-exported)
 from repro.models import autoencoder as ae
 
 
@@ -51,19 +52,6 @@ class FLResult(NamedTuple):
     eval_iters: np.ndarray       # (n_evals,)
     eval_loss: np.ndarray        # (n_evals,) global reconstruction loss
     client_params: object
-
-
-def stack_clients(datasets: Sequence) -> tuple[jax.Array, jax.Array]:
-    """Pad per-client arrays to a common length; returns (data, sizes)."""
-    sizes = jnp.asarray([d.shape[0] for d in datasets], jnp.int32)
-    max_n = int(sizes.max())
-    padded = []
-    for d in datasets:
-        d = jnp.asarray(d)
-        reps = -(-max_n // d.shape[0])
-        tiled = jnp.tile(d, (reps,) + (1,) * (d.ndim - 1))[:max_n]
-        padded.append(tiled)
-    return jnp.stack(padded), sizes
 
 
 def _broadcast(params, n):

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.recon_gate import recon_gate_pallas
 
 
 def _use_pallas(override):
@@ -68,6 +69,35 @@ def kmeans_assign(x, centroids, use_pallas=None):
     if pad_n:
         assign, min_d2 = assign[:n], min_d2[:n]
     return assign, min_d2
+
+
+# ---------------------------------------------------------------------------
+# exchange gate: masked reconstruction-MSE scoring
+# ---------------------------------------------------------------------------
+
+def recon_gate_score(y, x, mask, use_pallas=None):
+    """y, x: (..., R, P); mask: (..., R) -> (...,) masked mean MSE.
+
+    Per-sample pixel-mean squared error averaged over each group's valid
+    samples — the AE exchange gate's subset score (see kernels/recon_gate.py).
+    """
+    if not _use_pallas(use_pallas):
+        return ref.recon_gate_ref(y, x, mask)
+    lead = y.shape[:-2]
+    r, p = y.shape[-2:]
+    g = 1
+    for s in lead:
+        g *= s
+    yf = y.reshape(g, r, p)
+    xf = x.reshape(g, r, p)
+    mf = mask.reshape(g, r)
+    yf, _ = _pad_to(yf, 2, 128)
+    xf, _ = _pad_to(xf, 2, 128)
+    yf, _ = _pad_to(yf, 1, 8)
+    xf, _ = _pad_to(xf, 1, 8)
+    mf, _ = _pad_to(mf, 1, 8)   # padded samples carry mask 0: never counted
+    out = recon_gate_pallas(yf, xf, mf, p_true=p, interpret=_interpret())
+    return out.reshape(lead)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused masked reconstruction-MSE gate scoring.
+
+The exchange gate (paper Sec. III-B) scores every (receiver, cluster)
+reserve subset with the receiver's autoencoder: score = mean over the
+subset's *valid* samples of the per-sample reconstruction MSE.  The AE
+forward pass stays in XLA; this kernel fuses the tail — squared error,
+per-sample pixel mean, masked sample mean — so the (G, R, P) residual
+tensor is never materialised in HBM.
+
+Layout: reconstructions ``y`` and targets ``x`` arrive flattened to
+(G, R, P) where G = groups (receiver x cluster pairs, or receivers for the
+base score), R = samples per group, P = pixels per sample; ``mask`` (G, R)
+marks valid samples.  Each grid step streams one group's (R, P) tiles into
+VMEM, reduces to a single masked-mean scalar and writes one f32 back.
+
+VMEM per step (f32): 2*R*P + 2*R floats.  At the pipeline's shapes
+(R<=64 padded to x8, P=H*W*C padded to x128, e.g. 28*28 -> 896) that is
+2*64*896*4 B ~= 448 KiB << 16 MiB.  Callers pad P with equal values in y
+and x (zero residual) and pad R with mask=0, so padding never moves the
+score; the true pixel count is baked in statically via ``inv_p``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(y_ref, x_ref, m_ref, out_ref, *, inv_p):
+    y = y_ref[...].astype(jnp.float32)              # (1, R, P)
+    x = x_ref[...].astype(jnp.float32)              # (1, R, P)
+    m = m_ref[...].astype(jnp.float32)              # (1, R)
+    d = y - x
+    per = jnp.sum(d * d, axis=2) * inv_p            # (1, R) per-sample MSE
+    num = jnp.sum(per * m, axis=1)                  # (1,)
+    cnt = jnp.sum(m, axis=1)                        # (1,)
+    out_ref[...] = num / jnp.maximum(cnt, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("p_true", "interpret"))
+def recon_gate_pallas(y, x, mask, *, p_true: int, interpret: bool = False):
+    """y, x: (G, R, P); mask: (G, R) -> (G,) masked mean per-sample MSE.
+
+    R % 8 == 0 and P % 128 == 0 assumed; ``p_true`` is the unpadded pixel
+    count (use ops.recon_gate_score for automatic padding).
+    """
+    g, r, p = y.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, inv_p=1.0 / float(p_true)),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, r, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, r, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.float32),
+        interpret=interpret,
+    )(y, x, mask)

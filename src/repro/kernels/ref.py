@@ -23,6 +23,17 @@ def kmeans_assign_ref(x, centroids):
     return assign, min_d2
 
 
+def recon_gate_ref(y, x, mask):
+    """y, x: (..., R, P); mask: (..., R) -> (...,) masked mean MSE.
+
+    Per-sample pixel-mean squared error, averaged over the valid (masked)
+    samples of each group — the exchange gate's subset score."""
+    d = (y - x).astype(jnp.float32)
+    per = jnp.mean(jnp.square(d), axis=-1)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(per * m, axis=-1) / jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
     """q: (B,S,H,hd); k,v: (B,L,Kv,hd) -> (B,S,H,hd).
 

@@ -60,18 +60,55 @@ def init_ae(key, cfg: AEConfig, dtype=jnp.float32):
     return cm.init_params(key, ae_specs(cfg), dtype)
 
 
+def _same_pads(size, k, s):
+    out = -(-size // s)
+    pad = max((out - 1) * s + k - size, 0)
+    return pad // 2, pad - pad // 2
+
+
+def _patch_conv(xp, w, stride):
+    """Stride through pre-padded xp, gather the kh*kw shifted views, contract
+    with one einsum: (B,ho,wo,kh*kw*? ...) x (kh*kw,C,F) on the GEMM path."""
+    kh, kw, c, f = w.shape
+    ho = (xp.shape[1] - kh) // stride + 1
+    wo = (xp.shape[2] - kw) // stride + 1
+    patches = jnp.stack(
+        [xp[:, dy:dy + (ho - 1) * stride + 1:stride,
+             dx:dx + (wo - 1) * stride + 1:stride]
+         for dy in range(kh) for dx in range(kw)], axis=3)
+    return jnp.einsum("bhwpc,pcf->bhwf", patches, w.reshape(kh * kw, c, f),
+                      preferred_element_type=jnp.float32)
+
+
 def _conv(x, w, b, stride=1):
-    y = jax.lax.conv_general_dilated(
-        x, w, (stride, stride), "SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return y + b
+    """'SAME' conv via patch-gather + einsum (matches lax.conv numerics).
+
+    The batched client paths (FL trainer, exchange gate engine) vmap this
+    over stacked per-client filters; XLA:CPU lowers a vmapped-filter conv to
+    a slow grouped-conv loop, while the einsum stays one fast batched GEMM
+    (and feeds the MXU directly on TPU)."""
+    kh, kw = w.shape[:2]
+    plo, phi = _same_pads(x.shape[1], kh, stride)
+    qlo, qhi = _same_pads(x.shape[2], kw, stride)
+    xp = jnp.pad(x, ((0, 0), (plo, phi), (qlo, qhi), (0, 0)))
+    return _patch_conv(xp, w, stride) + b
 
 
 def _conv_t(x, w, b, stride=2):
-    y = jax.lax.conv_transpose(
-        x, w, (stride, stride), "SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return y + b
+    """'SAME' transposed conv: zero-stuff + stride-1 patch conv.
+
+    Same padding rule as jax.lax.conv_transpose; avoids XLA:CPU's slow
+    lhs-dilated conv path on top of the grouped-conv issue above."""
+    bsz, h, wd, c = x.shape
+    kh, kw = w.shape[:2]
+    xd = jnp.zeros(
+        (bsz, stride * h - (stride - 1), stride * wd - (stride - 1), c),
+        x.dtype).at[:, ::stride, ::stride].set(x)
+    pad_len = kh + stride - 2
+    pad_a = kh - 1 if stride > kh - 1 else -(-pad_len // 2)
+    xp = jnp.pad(xd, ((0, 0), (pad_a, pad_len - pad_a),
+                      (pad_a, pad_len - pad_a), (0, 0)))
+    return _patch_conv(xp, w, 1) + b
 
 
 def encode(params, x, cfg: AEConfig):
@@ -107,3 +144,15 @@ def per_sample_loss(params, x, cfg: AEConfig):
     """(B,) per-sample MSE — the exchange gate's anomaly score."""
     y = reconstruct(params, x, cfg)
     return jnp.mean(jnp.square(y - x), axis=(1, 2, 3))
+
+
+def masked_recon_loss(params, x, mask, cfg: AEConfig):
+    """Masked mean per-sample MSE over a padded client stack.
+
+    With ``mask`` selecting each real sample exactly once this equals
+    :func:`recon_loss` on the unpadded data (every sample has the same pixel
+    count), so gradients through padded stacks are exact.
+    """
+    per = per_sample_loss(params, x, cfg)
+    m = mask.astype(per.dtype)
+    return jnp.sum(per * m) / jnp.maximum(jnp.sum(m), 1.0)

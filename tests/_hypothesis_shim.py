@@ -1,0 +1,95 @@
+"""Minimal fixed-seed stand-in for the subset of the ``hypothesis`` API this
+suite uses (``given`` / ``settings`` / ``strategies``).
+
+Tier-1 must collect and pass on hosts that lack the optional dev dependency
+(declared in requirements-dev.txt).  When the real library is absent,
+``tests/conftest.py`` installs this shim into ``sys.modules`` before test
+modules import it.  ``@given`` then runs each property as a deterministic
+example sweep: the strategy bounds/elements first (the classic edge cases),
+followed by draws from a ``random.Random`` seeded with the test's qualified
+name — stable across runs and processes.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw, edges=()):
+        self._draw = draw
+        self._edges = list(edges)
+
+    def example_at(self, i, rng):
+        if i < len(self._edges):
+            return self._edges[i]
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value),
+                     edges=[min_value, max_value])
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda r: r.uniform(min_value, max_value),
+                     edges=[min_value, max_value])
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements), edges=elements[:2])
+
+
+def booleans():
+    return _Strategy(lambda r: bool(r.getrandbits(1)), edges=[False, True])
+
+
+def just(value):
+    return _Strategy(lambda r: value, edges=[value])
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper():
+            # @settings may sit above @given (attribute lands on wrapper) or
+            # below it (attribute lands on fn) — both are legal orders
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+            for i in range(n):
+                fn(**{name: s.example_at(i, rng)
+                      for name, s in strategies.items()})
+        # plain attribute copies, no functools.wraps: a __wrapped__ link
+        # would make pytest resolve the strategy params as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def install():
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans", "just"):
+        setattr(st, name, globals()[name])
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__is_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -4,6 +4,17 @@ import sys
 # Tests and benches must see exactly the real host device count (1), not the
 # dry-run's 512 placeholder devices — do NOT set XLA_FLAGS here.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# Tier-1 must collect even on hosts without the optional `hypothesis` dev
+# dependency (declared in requirements-dev.txt).  When it is missing,
+# install a deterministic fixed-seed shim before any test module imports it.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from _hypothesis_shim import install as _install_hypothesis_shim
+
+    _install_hypothesis_shim()
 
 import jax
 import pytest

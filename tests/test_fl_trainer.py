@@ -23,6 +23,7 @@ def fed_data():
     return xs, ys, ev
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("scheme", ["fedavg", "fedsgd", "fedprox"])
 def test_scheme_reduces_loss(scheme, fed_data):
     xs, _, ev = fed_data
@@ -56,6 +57,7 @@ def test_all_clients_synced_after_round(fed_data):
     assert max(jax.tree.leaves(d)) < 1e-6  # broadcast after aggregation
 
 
+@pytest.mark.slow
 def test_linear_evaluation_beats_chance(fed_data):
     xs, _, ev = fed_data
     cfg = FLConfig(total_iters=100, tau_a=10, eval_every=100, batch_size=32)

@@ -14,6 +14,15 @@ def mesh():
     return jax.make_mesh((1, n), ("data", "model"))
 
 
+def _abstract_mesh(sizes, names):
+    """jax >= 0.5 takes AbstractMesh(sizes, names); 0.4.x takes the zipped
+    ((name, size), ...) shape tuple — support both."""
+    try:
+        return jax.sharding.AbstractMesh(sizes, names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+
+
 def test_basic_spec(mesh):
     rules = sh.ShardingRules.default(mesh)
     spec = rules.spec((sh.D_MODEL, sh.D_FF))
@@ -23,7 +32,7 @@ def test_basic_spec(mesh):
 def test_divisibility_fallback():
     # use a fake 16-wide model axis via an abstract mesh (no devices needed
     # beyond 1: AbstractMesh carries only shape/axis metadata)
-    amesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    amesh = _abstract_mesh((16, 16), ("data", "model"))
     rules = sh.ShardingRules.default(amesh)
     spec = rules.spec((sh.D_MODEL, sh.D_FF), dims=(32, 49))
     assert spec[1] is None  # d_ff=49 not divisible by 16 -> replicated
@@ -33,7 +42,7 @@ def test_divisibility_fallback():
 
 def test_axis_dedupe_moe_fallback():
     """EXPERTS and D_FF both map to "model": the second use is dropped."""
-    amesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    amesh = _abstract_mesh((16, 16), ("data", "model"))
     rules = sh.ShardingRules.default(amesh)
     spec = rules.spec((sh.EXPERTS, sh.D_MODEL, sh.D_FF), dims=(64, 32, 32))
     assert spec == P("model", ("data",), None)

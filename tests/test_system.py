@@ -60,6 +60,7 @@ def test_exchange_moves_data_and_preserves_senders(pipeline_result, world):
         assert after.shape[0] >= before.shape[0]  # copies, never removal
 
 
+@pytest.mark.slow
 def test_smart_exchange_beats_no_exchange(world, pipeline_result):
     """Paper Fig. 5 (reduced): FL on exchanged data converges to a lower
     reconstruction loss than FL on the raw non-i.i.d. partitions."""
