@@ -1,18 +1,27 @@
 """Benchmark harness: one entry per paper table/figure + kernel micro-bench +
-the roofline table.  Prints ``name,us_per_call,derived`` CSV lines.
+the roofline table + the dynamic-deployment scenarios.  Prints
+``name,us_per_call,derived`` CSV lines.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5] \\
+        [--json runs/bench/BENCH_quick.json]
 
 --full uses the paper-scale settings (30 clients, 1500 iterations); the
 default quick settings preserve every claim's *ordering* at ~10x less CPU.
+--json additionally records every emitted CSV row as a JSON artifact so the
+perf trajectory across PRs is machine-diffable.
 """
 import argparse
+import io
+import json
+import os
+import re
 import sys
+import time
 import traceback
 
-from benchmarks import (beyond_paper, dryrun_table, fig3_heatmap, fig4_links,
-                        fig5_convergence, fig6_stragglers, kernel_bench,
-                        roofline_table)
+from benchmarks import (beyond_paper, dryrun_table, dynamic_scenarios,
+                        fig3_heatmap, fig4_links, fig5_convergence,
+                        fig6_stragglers, kernel_bench, roofline_table)
 
 BENCHES = {
     "fig3": fig3_heatmap.main,
@@ -23,24 +32,79 @@ BENCHES = {
     "roofline": roofline_table.main,
     "dryrun": dryrun_table.main,
     "beyond": beyond_paper.main,
+    "dynamic": dynamic_scenarios.main,
 }
+
+# a result row: bench_name,<int-or-float us>,<derived k=v fields>
+_ROW_RE = re.compile(r"^([A-Za-z][\w.-]*),(\d+(?:\.\d+)?),(.*)$")
+
+
+class _RowTee(io.TextIOBase):
+    """stdout tee that records the benchmark CSV rows as they stream by."""
+
+    def __init__(self, real):
+        self.real = real
+        self.rows = []
+        self._buf = ""
+
+    def write(self, s):
+        self.real.write(s)
+        self._buf += s
+        while "\n" in self._buf:
+            line, self._buf = self._buf.split("\n", 1)
+            m = _ROW_RE.match(line.strip())
+            if m and m.group(1) != "name":
+                self.rows.append({"name": m.group(1),
+                                  "us_per_call": float(m.group(2)),
+                                  "derived": m.group(3)})
+        return len(s)
+
+    def flush(self):
+        self.real.flush()
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows to a BENCH_*.json "
+                         "artifact at PATH")
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
+
+    tee = _RowTee(sys.stdout) if args.json else None
+    if tee is not None:
+        sys.stdout = tee
     print("name,us_per_call,derived")
     failed = 0
-    for name in names:
-        try:
-            BENCHES[name](quick=not args.full)
-        except Exception:
-            failed += 1
-            traceback.print_exc()
-            print(f"{name},0,FAILED")
+    try:
+        for name in names:
+            try:
+                BENCHES[name](quick=not args.full)
+            except Exception:
+                failed += 1
+                traceback.print_exc()
+                print(f"{name},0,FAILED")
+    finally:
+        if tee is not None:
+            sys.stdout = tee.real
+            payload = {
+                "schema": "bench-rows/v1",
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                           time.gmtime()),
+                "mode": "full" if args.full else "quick",
+                "benches": names,
+                "failed": failed,
+                "rows": tee.rows,
+            }
+            d = os.path.dirname(args.json)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=1)
+            print(f"wrote {len(tee.rows)} rows -> {args.json}",
+                  file=sys.stderr)
     sys.exit(1 if failed else 0)
 
 

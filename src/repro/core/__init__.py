@@ -6,7 +6,8 @@ from repro.core.exchange import ExchangeConfig, run_exchange  # noqa: F401
 from repro.core import kmeans  # noqa: F401  (module; fit = kmeans.kmeans)
 from repro.core.kmeans import kmeans_plus_plus_init  # noqa: F401
 from repro.core.pca import PCA, fit_pca, fit_pca_federated  # noqa: F401
-from repro.core.pipeline import PipelineConfig, PipelineResult, run_pipeline  # noqa: F401
+from repro.core.pipeline import (PipelineConfig, PipelineResult,  # noqa: F401
+                                 run_pipeline, split_pipeline_keys)
 from repro.core.qlearning import RLConfig, discover_graph, uniform_graph  # noqa: F401
 from repro.core.rewards import RewardConfig, local_reward_matrix  # noqa: F401
 from repro.core.trust import full_trust, make_trust  # noqa: F401

@@ -1,4 +1,4 @@
-"""D2D channel model (paper Sec. II-C).
+"""D2D channel model (paper Sec. II-C) + temporal evolution primitives.
 
 P_D(i,j) = 1 - exp( -(2^r - 1) * sigma^2 / W_ij )
 
@@ -6,6 +6,23 @@ where W_ij is the received signal strength (RSS) at c_i from c_j, sigma^2 the
 (shared) noise power and r the constant transmission rate.  We synthesise W
 from random device positions with a log-distance path-loss model — the paper
 takes W as given; any positive matrix works.
+
+The stateless snapshot entry point (:func:`make_rss`) is what the one-shot
+pipeline uses.  The dynamics subsystem (``repro.dynamics``) instead keeps the
+channel *state* — device positions and a per-link fading matrix — explicit
+and evolves it between FL segments:
+
+  * :func:`positions_step` — device mobility as a reflected Gaussian random
+    walk inside the deployment area,
+  * :func:`fading_step` — correlated block fading as a log-domain AR(1)
+    (Gauss–Markov) process: strictly positive, mean-reverting to unit
+    fading (log f = 0, i.e. pure path loss) with stationary log-std
+    ``sigma``, decorrelating at rate ``rho`` per step,
+  * :func:`rss_from_state` — RSS snapshot from (positions, fading).
+
+``rss_from_positions(key, pos) == rss_from_state(pos, init_fading(key, n))``
+bit-for-bit, so a frozen environment reproduces the one-shot channel draw
+exactly (the dynamics parity test relies on this).
 """
 from __future__ import annotations
 
@@ -29,16 +46,54 @@ def make_positions(key, n: int, cfg: ChannelConfig = ChannelConfig()):
     return jax.random.uniform(key, (n, 2), minval=0.0, maxval=cfg.area)
 
 
+def path_loss(pos, cfg: ChannelConfig = ChannelConfig()):
+    """Symmetric log-distance path-loss matrix from device positions."""
+    d = jnp.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
+    d = jnp.maximum(d, cfg.min_dist)
+    return cfg.tx_power * d ** (-cfg.pathloss_exp)
+
+
+def init_fading(key, n: int):
+    """Initial per-link (asymmetric) Rayleigh-like fading draw."""
+    return jax.random.exponential(key, (n, n)) * 0.5 + 0.75  # mild fading
+
+
+def rss_from_state(pos, fade, cfg: ChannelConfig = ChannelConfig()):
+    """W[i, j]: RSS at i receiving from j, from explicit channel state."""
+    n = pos.shape[0]
+    w = path_loss(pos, cfg) * fade
+    return w.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+
+
 def rss_from_positions(key, pos, cfg: ChannelConfig = ChannelConfig()):
     """W[i, j]: RSS at i receiving from j. Symmetric path loss, asymmetric
     (per-link) Rayleigh-like fading."""
-    n = pos.shape[0]
-    d = jnp.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
-    d = jnp.maximum(d, cfg.min_dist)
-    pl = cfg.tx_power * d ** (-cfg.pathloss_exp)
-    fade = jax.random.exponential(key, (n, n)) * 0.5 + 0.75  # mild fading
-    w = pl * fade
-    return w.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+    return rss_from_state(pos, init_fading(key, pos.shape[0]), cfg)
+
+
+def positions_step(key, pos, step_std: float,
+                   cfg: ChannelConfig = ChannelConfig()):
+    """One mobility step: Gaussian random walk reflected into [0, area]^2.
+
+    Reflection (rather than clipping) keeps the stationary position
+    distribution uniform; valid for |step| < area, which any sane
+    ``step_std`` satisfies."""
+    p = pos + jax.random.normal(key, pos.shape) * step_std
+    p = jnp.abs(p)                          # bounce off 0
+    return cfg.area - jnp.abs(cfg.area - p)  # bounce off area
+
+
+def fading_step(key, fade, rho: float, sigma: float):
+    """One correlated block-fading step (Gauss–Markov AR(1) in log domain):
+
+        log f_t = rho * log f_{t-1} + sqrt(1 - rho^2) * sigma * eps
+
+    Strictly positive for positive input, stationary with log-std ``sigma``,
+    and decorrelates over ~1/(1-rho) steps.  rho=1 freezes the fading."""
+    eps = jax.random.normal(key, fade.shape)
+    logf = rho * jnp.log(fade) + jnp.sqrt(
+        jnp.maximum(1.0 - rho * rho, 0.0)) * sigma * eps
+    return jnp.exp(logf)
 
 
 def make_rss(key, n: int, cfg: ChannelConfig = ChannelConfig()):

@@ -48,6 +48,24 @@ class PipelineResult(NamedTuple):
     graph: ql.GraphResult
     moved_counts: object
     centroids: list
+    trust: Optional[list] = None      # per-transmitter T_j matrices
+    exchange: Optional[object] = None  # full ExchangeResult (gate decisions)
+
+
+class PipelineKeys(NamedTuple):
+    """The five sub-keys ``run_pipeline`` derives from its key, exposed so
+    external drivers (the dynamics orchestrator) can reproduce individual
+    draws — e.g. seed the channel environment with ``k_ch`` and hand the
+    resulting RSS back via ``run_pipeline(..., rss=...)`` bit-for-bit."""
+    k_cl: jax.Array
+    k_tr: jax.Array
+    k_ch: jax.Array
+    k_rl: jax.Array
+    k_ex: jax.Array
+
+
+def split_pipeline_keys(key) -> PipelineKeys:
+    return PipelineKeys(*jax.random.split(key, 5))
 
 
 def _flatten(x):
@@ -70,19 +88,24 @@ def cluster_clients(key, datasets, cfg: PipelineConfig):
 
 def run_pipeline(key, datasets, labels, ae_cfg: AEConfig,
                  cfg: PipelineConfig = PipelineConfig(),
-                 in_edge=None, exchange_method=None) -> PipelineResult:
+                 in_edge=None, exchange_method=None, rss=None) -> PipelineResult:
     """Full smart-exchange. Pass ``in_edge`` to skip RL (e.g. uniform
     baseline graphs) while keeping the same exchange machinery.
 
     ``exchange_method`` overrides ``cfg.exchange.method``: "batched" runs
     the device-resident gate engine (default), "loop" the reference
-    host-side plane (parity testing) — see ``core/exchange.py``."""
-    k_cl, k_tr, k_ch, k_rl, k_ex = jax.random.split(key, 5)
+    host-side plane (parity testing) — see ``core/exchange.py``.
+
+    ``rss`` supplies a precomputed channel snapshot (the dynamics
+    orchestrator owns the channel state); omitted, one is drawn from the
+    pipeline key exactly as before."""
+    k_cl, k_tr, k_ch, k_rl, k_ex = split_pipeline_keys(key)
     n = len(datasets)
 
     pca, cents, assigns = cluster_clients(k_cl, datasets, cfg)
     trust = tr.make_trust(k_tr, n, cfg.n_clusters, cfg.p_trust)
-    rss = ch.make_rss(k_ch, n, cfg.channel)
+    if rss is None:
+        rss = ch.make_rss(k_ch, n, cfg.channel)
     p_fail = ch.failure_prob(rss, cfg.channel)
 
     beta = cfg.beta if cfg.beta is not None else \
@@ -107,4 +130,5 @@ def run_pipeline(key, datasets, labels, ae_cfg: AEConfig,
     lam_after = ds.lambda_matrix(cents_after, trust, beta)
 
     return PipelineResult(res.datasets, res.labels, in_edge, lam_before,
-                          lam_after, p_fail, graph, res.moved_counts, cents)
+                          lam_after, p_fail, graph, res.moved_counts, cents,
+                          trust, res)

@@ -15,7 +15,7 @@ paper's expression whenever Q >= 0 elementwise.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +55,7 @@ class GraphResult(NamedTuple):
     q: jax.Array              # (N, N) final Q-table
     ep_mean_local: jax.Array  # (E,) mean local reward per episode
     ep_mean_pfail: jax.Array  # (E,) mean P_D of chosen links per episode
+    state: Optional[RLState] = None  # full final state (warm-start seed)
 
 
 def _gamma(t, cfg: RLConfig):
@@ -100,16 +101,10 @@ def _q_update(q, buf_actions, buf_rewards):
     return q + means
 
 
-def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig()) -> GraphResult:
-    """Run Algorithm 1.
-
-    local_r: (N, N) precomputed r_ij (Eq. 2; stationary in the paper's
-    setting since lambda and P_D are fixed during discovery).
-    p_fail: (N, N) P_D for diagnostics.
-    """
-    n = local_r.shape[0]
+def init_rl_state(n: int, cfg: RLConfig = RLConfig()) -> RLState:
+    """Cold-start agent state (paper: small equal Q values, empty buffers)."""
     m = cfg.buffer_size
-    state = RLState(
+    return RLState(
         q=jnp.full((n, n), cfg.q_init),
         counts=jnp.zeros((n, n)),
         buf_actions=jnp.zeros((n, m), jnp.int32),
@@ -118,6 +113,28 @@ def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig()) -> GraphRes
         r_net_prev=jnp.zeros(()),
         t=jnp.zeros((), jnp.int32),
     )
+
+
+def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig(),
+                   init_state: Optional[RLState] = None,
+                   n_episodes: Optional[int] = None) -> GraphResult:
+    """Run Algorithm 1.
+
+    local_r: (N, N) precomputed r_ij (Eq. 2; stationary in the paper's
+    setting since lambda and P_D are fixed during discovery).
+    p_fail: (N, N) P_D for diagnostics.
+
+    ``init_state`` warm-starts from a previous epoch's final
+    :class:`RLState` (``GraphResult.state``) — the online orchestrator uses
+    this so short re-discovery bursts inherit the learned Q-tables instead
+    of re-exploring from scratch.  ``n_episodes`` overrides
+    ``cfg.n_episodes`` for such bursts; the whole burst stays one
+    device-resident ``lax.scan``.
+    """
+    n = local_r.shape[0]
+    m = cfg.buffer_size
+    n_ep = cfg.n_episodes if n_episodes is None else n_episodes
+    state = init_state if init_state is not None else init_rl_state(n, cfg)
     use_ucb = cfg.policy == "ucb"
 
     def episode(state: RLState, inp):
@@ -159,18 +176,21 @@ def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig()) -> GraphRes
         diag = (jnp.mean(r_loc), jnp.mean(p_fail[jnp.arange(n), actions]))
         return state, diag
 
-    keys = jax.random.split(key, cfg.n_episodes)
+    keys = jax.random.split(key, n_ep)
     state, (ep_r, ep_p) = jax.lax.scan(
-        episode, state, (jnp.arange(cfg.n_episodes), keys))
+        episode, state, (jnp.arange(n_ep), keys))
 
     # Eq. 7: final links = argmax accumulated reward (self masked).
-    # UCB: argmax of the running MEAN (sums are count-biased).
-    qf = state.q / jnp.maximum(state.counts, 1.0) if use_ucb else state.q
+    # UCB: argmax of the running MEAN (sums are count-biased); actions never
+    # tried have no estimate and are masked out.
+    if use_ucb:
+        qf = state.q / jnp.maximum(state.counts, 1.0)
+        qf = jnp.where(state.counts == 0, -jnp.inf, qf)
+    else:
+        qf = state.q
     qf = qf.at[jnp.arange(n), jnp.arange(n)].set(-jnp.inf)
-    qf = jnp.where(use_ucb & (state.counts == 0), -jnp.inf, qf) \
-        if use_ucb else qf
     in_edge = jnp.argmax(qf, axis=1)
-    return GraphResult(in_edge, state.q, ep_r, ep_p)
+    return GraphResult(in_edge, state.q, ep_r, ep_p, state)
 
 
 def uniform_graph(key, n: int) -> jax.Array:

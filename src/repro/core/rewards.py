@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 
@@ -46,7 +47,6 @@ def network_performance(buf_actions, buf_rewards_local, n_actions: int):
 
     buf_actions: (N, M) int32; buf_rewards_local: (N, M) local rewards at
     the time each action was taken."""
-    import jax
     onehot = jax.nn.one_hot(buf_actions, n_actions, dtype=jnp.float32)  # (N,M,A)
     counts = jnp.sum(onehot, axis=1)                                    # (N,A)
     freq_action = jnp.argmax(counts, axis=-1)                           # (N,)

@@ -1,0 +1,18 @@
+"""Dynamics subsystem: time-varying D2D environments + online orchestration.
+
+Turns the one-shot pipeline (one channel snapshot, one RL discovery, one
+exchange, one training run) into an online simulation loop — the regime the
+paper's convergence/straggler claims are actually about.  See
+``scenarios.py`` for the preset registry, ``environment.py`` for the
+channel/availability process, ``orchestrator.py`` for the simulation loop
+and ``metrics.py`` for the per-segment trace.
+"""
+from repro.dynamics.environment import (EnvState, env_init, env_step,  # noqa: F401
+                                        stragglers_from)
+from repro.dynamics.metrics import SegmentRecord, Trace  # noqa: F401
+from repro.dynamics.orchestrator import (MODES, OrchestratorConfig,  # noqa: F401
+                                         OrchestratorResult,
+                                         run_orchestrator)
+from repro.dynamics.scenarios import (ScenarioConfig,  # noqa: F401
+                                      available_scenarios, get_scenario,
+                                      register_scenario)

@@ -1,0 +1,95 @@
+"""The environment process: explicit, evolving D2D channel + availability.
+
+The one-shot pipeline draws a single RSS snapshot and forgets the state
+that produced it.  Here the state is first-class: device positions, the
+per-link fading matrix, and the per-client availability mask live in an
+:class:`EnvState` that :func:`env_step` advances once per orchestrator
+segment according to a :class:`ScenarioConfig`:
+
+  * positions follow a reflected Gaussian random walk
+    (``channel.positions_step``),
+  * fading follows a positive log-AR(1) Gauss–Markov process
+    (``channel.fading_step``),
+  * availability is i.i.d. churn or a flash-crowd arrival ramp.
+
+``env_init(key, n)`` splits its key exactly like ``channel.make_rss`` so a
+frozen environment's ``rss`` equals the one-shot draw bit-for-bit — seed it
+with the pipeline's ``k_ch`` (``pipeline.split_pipeline_keys``) and the
+static scenario reproduces ``run_pipeline`` unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+from repro.dynamics.scenarios import ScenarioConfig
+
+
+class EnvState(NamedTuple):
+    positions: jax.Array   # (N, 2) device coordinates
+    fading: jax.Array      # (N, N) positive per-link fading
+    rss: jax.Array         # (N, N) current RSS snapshot (diag = +inf)
+    available: jax.Array   # (N,) bool, client online this segment
+    t: jax.Array           # () int32 segment counter
+
+
+def env_init(key, n: int, ccfg: ch.ChannelConfig = ch.ChannelConfig(),
+             scn: ScenarioConfig | None = None) -> EnvState:
+    """Initial environment state; ``rss`` matches ``make_rss(key, n, ccfg)``
+    bit-for-bit (same key split, same draw order)."""
+    kp, kf = jax.random.split(key)
+    pos = ch.make_positions(kp, n, ccfg)
+    fade = ch.init_fading(kf, n)
+    rss = ch.rss_from_state(pos, fade, ccfg)
+    avail = jnp.ones((n,), bool)
+    if scn is not None and scn.flash_crowd:
+        avail = _flash_crowd_mask(n, 0, scn)
+    return EnvState(pos, fade, rss, avail, jnp.zeros((), jnp.int32))
+
+
+def _flash_crowd_mask(n: int, t: int, scn: ScenarioConfig) -> jax.Array:
+    """Deterministic arrival ramp: the first ``k(t)`` clients are online,
+    k ramping linearly from ``flash_initial_frac * n`` to ``n``."""
+    frac = min(1.0, scn.flash_initial_frac
+               + (1.0 - scn.flash_initial_frac)
+               * (t / max(scn.flash_ramp_segments, 1)))
+    k = max(1, int(round(frac * n)))
+    return jnp.arange(n) < k
+
+
+def env_step(key, state: EnvState, scn: ScenarioConfig,
+             ccfg: ch.ChannelConfig = ch.ChannelConfig()) -> EnvState:
+    """Advance the environment one segment.
+
+    Draw order is fixed (positions, fading, availability) so scenarios that
+    share a sub-process see identical draws for it under the same key."""
+    kp, kf, ka = jax.random.split(key, 3)
+    pos, fade = state.positions, state.fading
+    if scn.mobility_step > 0.0:
+        pos = ch.positions_step(kp, pos, scn.mobility_step, ccfg)
+    if scn.fading_sigma > 0.0 and scn.fading_rho < 1.0:
+        fade = ch.fading_step(kf, fade, scn.fading_rho, scn.fading_sigma)
+    rss = ch.rss_from_state(pos, fade, ccfg)
+
+    n = pos.shape[0]
+    t = state.t + 1
+    if scn.flash_crowd:
+        avail = _flash_crowd_mask(n, int(t), scn)
+    elif scn.churn_prob > 0.0:
+        avail = jax.random.uniform(ka, (n,)) >= scn.churn_prob
+        # never let the whole fleet vanish — keep at least one client
+        avail = jnp.where(jnp.any(avail), avail,
+                          jnp.arange(n) == jnp.argmax(
+                              jax.random.uniform(ka, (n,))))
+    else:
+        avail = jnp.ones((n,), bool)
+    return EnvState(pos, fade, rss, avail, t)
+
+
+def stragglers_from(avail) -> tuple:
+    """Offline clients as the straggler tuple ``fl_train`` expects."""
+    import numpy as np
+    return tuple(int(i) for i in np.nonzero(~np.asarray(avail))[0])

@@ -1,0 +1,112 @@
+"""Per-segment metrics trace for the online simulation.
+
+Three quantities tell the story of a dynamic deployment:
+
+  * **eval loss** — did the federation keep converging while the world
+    moved underneath it?
+  * **link churn** — what fraction of receivers changed transmitter since
+    the previous graph (0 for a frozen graph; high churn under mobility
+    means the discovered topology actually tracks the environment),
+  * **delivery rate** — of the links the graph committed to, how many
+    would deliver under the *current* channel: expected rate is
+    ``1 - mean P_D`` over chosen links; when the exchange sampled the
+    channel, the realized rate is also recorded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SegmentRecord:
+    segment: int
+    eval_loss: float                 # global recon loss at segment end
+    in_edge: np.ndarray              # (N,) graph used during the segment
+    link_churn: float                # frac of receivers whose tx changed
+    mean_pfail: float                # mean P_D over chosen (non-self) links
+    expected_delivery: float         # 1 - mean_pfail
+    realized_delivery: Optional[float]  # frac of links that delivered, if
+                                        # the exchange sampled the channel
+    n_available: int                 # clients online this segment
+    moved: int                       # datapoints exchanged this segment
+    rediscovered: bool               # did an RL burst run this segment?
+    eval_iters: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    eval_curve: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+
+
+def link_churn(prev_edge, in_edge) -> float:
+    """Fraction of receivers whose transmitter changed; 0 if no previous."""
+    if prev_edge is None:
+        return 0.0
+    prev_edge = np.asarray(prev_edge)
+    in_edge = np.asarray(in_edge)
+    return float(np.mean(prev_edge != in_edge))
+
+
+def delivery_stats(in_edge, p_fail, decisions=None):
+    """(mean_pfail, expected, realized) for the chosen links.
+
+    decisions: the exchange's ``gate_decisions`` — entries
+    ``(rx, tx, cluster, accepted)`` with ``cluster == -1`` marking a link
+    whose sampled channel failed.  None when no channel sampling ran."""
+    in_edge = np.asarray(in_edge)
+    p_fail = np.asarray(p_fail)
+    n = in_edge.shape[0]
+    live = in_edge != np.arange(n)
+    if not live.any():
+        return 1.0, 0.0, None
+    pf = float(np.mean(p_fail[np.arange(n)[live], in_edge[live]]))
+    realized = None
+    if decisions is not None:
+        failed_rx = {d[0] for d in decisions if d[2] == -1}
+        realized = 1.0 - len(failed_rx) / max(int(live.sum()), 1)
+    return pf, 1.0 - pf, realized
+
+
+class Trace:
+    """Accumulates SegmentRecords and derives run-level summaries."""
+
+    def __init__(self):
+        self.segments: List[SegmentRecord] = []
+
+    def add(self, rec: SegmentRecord):
+        self.segments.append(rec)
+
+    @property
+    def eval_losses(self) -> np.ndarray:
+        return np.asarray([s.eval_loss for s in self.segments])
+
+    @property
+    def eval_curve(self) -> np.ndarray:
+        """All intra-segment eval points concatenated (the fl_train trace)."""
+        parts = [s.eval_curve for s in self.segments if s.eval_curve.size]
+        return np.concatenate(parts) if parts else np.zeros(0)
+
+    @property
+    def eval_curve_iters(self) -> np.ndarray:
+        parts = [s.eval_iters for s in self.segments if s.eval_iters.size]
+        return np.concatenate(parts) if parts else np.zeros(0, np.int64)
+
+    def summary(self) -> dict:
+        segs = self.segments
+        realized = [s.realized_delivery for s in segs
+                    if s.realized_delivery is not None]
+        return {
+            "n_segments": len(segs),
+            "final_loss": float(segs[-1].eval_loss) if segs else float("nan"),
+            "mean_link_churn": float(np.mean(
+                [s.link_churn for s in segs[1:]])) if len(segs) > 1 else 0.0,
+            "mean_expected_delivery": float(np.mean(
+                [s.expected_delivery for s in segs])) if segs else 0.0,
+            "mean_realized_delivery": (float(np.mean(realized))
+                                       if realized else None),
+            "total_moved": int(sum(s.moved for s in segs)),
+            "n_rediscoveries": int(sum(s.rediscovered for s in segs)),
+            "min_available": int(min((s.n_available for s in segs),
+                                     default=0)),
+        }

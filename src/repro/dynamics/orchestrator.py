@@ -1,0 +1,200 @@
+"""Online orchestrator: interleave FL training with graph re-discovery.
+
+The one-shot pipeline is   discover → exchange → train to completion.
+A real D2D deployment never gets that luxury: the channel fades, devices
+move, clients drop out.  The orchestrator turns the repo's top-level API
+from "run once" into "simulate a deployment":
+
+    segment 0:  initial discovery + exchange (the one-shot pipeline, fed
+                the environment's RSS), then ``iters_per_segment`` FL iters
+    segment s:  advance the environment (fading / mobility / churn) →
+                optionally re-discover the graph with a short warm-started
+                RL burst and re-exchange over the new links → resume FL
+                from the previous segment's full carry
+
+Three modes, matching the benchmark baselines:
+
+``"oneshot"``   never re-discovers — the initial graph is used throughout
+                (the paper's protocol, exposed to a moving world).
+``"online"``    periodic RL re-discovery, warm-starting each burst from the
+                previous epoch's Q-tables (``GraphResult.state``), plus a
+                re-exchange over the updated graph.
+``"uniform"``   re-draws a uniform random graph on the same cadence —
+                the ablation separating "any re-exchange helps" from
+                "RL-chosen links help".
+
+Determinism contract (tested in ``tests/test_dynamics_parity.py``): under
+the ``static`` scenario with mode ``"oneshot"``, the run is bit-for-bit
+``run_pipeline(k_pipe) + fl_train(k_fl)`` where
+``k_pipe, k_env, k_fl = jax.random.split(key, 3)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import numpy as np
+
+from repro.core import dissimilarity as ds
+from repro.core import exchange as ex
+from repro.core import qlearning as ql
+from repro.core import rewards as rw
+from repro.core.channel import failure_prob
+from repro.core.pipeline import (PipelineConfig, cluster_clients,
+                                 run_pipeline, split_pipeline_keys)
+from repro.dynamics.environment import env_init, env_step, stragglers_from
+from repro.dynamics.metrics import (SegmentRecord, Trace, delivery_stats,
+                                    link_churn)
+from repro.dynamics.scenarios import get_scenario
+from repro.fl.trainer import FLConfig, fl_train
+from repro.models import autoencoder as ae
+
+MODES = ("oneshot", "online", "uniform")
+
+
+@dataclasses.dataclass(frozen=True)
+class OrchestratorConfig:
+    n_segments: int = 5
+    iters_per_segment: int = 100       # FL iterations per segment
+    mode: str = "online"               # see MODES
+    rediscover_every: int = 1          # segments between re-discoveries
+    burst_episodes: int = 150          # RL episodes per warm-started burst
+    exchange_on_rediscover: bool = True
+    pipeline: PipelineConfig = dataclasses.field(
+        default_factory=PipelineConfig)
+    fl: FLConfig = dataclasses.field(default_factory=FLConfig)
+    # fl.total_iters is derived (n_segments * iters_per_segment); the field
+    # in `fl` is ignored so presets can share one FLConfig.
+
+    @property
+    def total_iters(self) -> int:
+        return self.n_segments * self.iters_per_segment
+
+
+class OrchestratorResult(NamedTuple):
+    trace: Trace
+    global_params: object
+    carry: object                  # final FLCarry
+    in_edge: jax.Array             # graph in force at the end
+    env: object                    # final EnvState
+    datasets: list                 # post-all-exchanges client data
+    labels: list
+    eval_iters: np.ndarray         # concatenated fl_train eval schedule
+    eval_loss: np.ndarray
+
+
+def _rediscover(key, data, trust, p_fail, cfg: OrchestratorConfig,
+                rl_state: Optional[ql.RLState]):
+    """Re-cluster the *current* datasets and run a warm-started RL burst
+    (or a uniform re-draw).  Returns (in_edge, rl_state, assigns)."""
+    k_cl, k_rl = jax.random.split(key)
+    pcfg = cfg.pipeline
+    _, cents, assigns = cluster_clients(k_cl, data, pcfg)
+    if cfg.mode == "uniform":
+        return ql.uniform_graph(k_rl, len(data)), rl_state, assigns
+    beta = pcfg.beta if pcfg.beta is not None else \
+        ds.median_heuristic_beta(cents, pcfg.beta_scale)
+    lam = ds.lambda_matrix(cents, trust, beta)
+    local_r = rw.local_reward_matrix(lam, p_fail, pcfg.reward)
+    graph = ql.discover_graph(k_rl, local_r, p_fail, pcfg.rl,
+                              init_state=rl_state,
+                              n_episodes=cfg.burst_episodes)
+    return graph.in_edge, graph.state, assigns
+
+
+def run_orchestrator(key, datasets, labels, ae_cfg,
+                     cfg: OrchestratorConfig = OrchestratorConfig(),
+                     scenario="static", eval_data=None) -> OrchestratorResult:
+    """Simulate a deployment: ``cfg.n_segments`` FL segments over an
+    evolving environment (see module docstring for the protocol)."""
+    if cfg.mode not in MODES:
+        raise ValueError(f"unknown mode {cfg.mode!r}; expected one of {MODES}")
+    if eval_data is None:
+        raise ValueError("eval_data is required: the per-segment trace is "
+                         "built around the global eval reconstruction loss")
+    if cfg.iters_per_segment % cfg.fl.tau_a != 0:
+        raise ValueError(
+            f"iters_per_segment={cfg.iters_per_segment} must be a multiple "
+            f"of the aggregation interval tau_a={cfg.fl.tau_a}: segment "
+            "boundaries fall between rounds otherwise (iterations would be "
+            "silently dropped and straggler masks applied to shifted "
+            "windows)")
+    scn = get_scenario(scenario)
+    k_pipe, k_env, k_fl = jax.random.split(key, 3)
+    n = len(datasets)
+    pcfg = cfg.pipeline
+    flcfg = dataclasses.replace(cfg.fl, total_iters=cfg.total_iters)
+
+    # The environment owns the channel; seeding it with the pipeline's
+    # channel sub-key makes segment 0's RSS the one-shot draw bit-for-bit.
+    env = env_init(split_pipeline_keys(k_pipe).k_ch, n, pcfg.channel, scn)
+
+    init_edge = None
+    if cfg.mode == "uniform":
+        # same convention as the one-shot uniform baseline (benchmarks)
+        init_edge = ql.uniform_graph(jax.random.fold_in(k_pipe, 7), n)
+    pipe = run_pipeline(k_pipe, datasets, labels, ae_cfg, pcfg,
+                        in_edge=init_edge, rss=env.rss)
+
+    data, labels = pipe.datasets, pipe.labels
+    trust = pipe.trust
+    in_edge = pipe.in_edge
+    rl_state = pipe.graph.state
+    p_fail = pipe.p_fail
+    decisions = pipe.exchange.gate_decisions
+    moved = int(np.asarray(pipe.moved_counts).sum())
+
+    trace = Trace()
+    carry = None
+    prev_edge = None
+    for s in range(cfg.n_segments):
+        rediscovered = s == 0
+        if s > 0:
+            env = env_step(jax.random.fold_in(k_env, s), env, scn,
+                           pcfg.channel)
+            p_fail = failure_prob(env.rss, pcfg.channel)
+            decisions, moved = None, 0
+            if cfg.mode != "oneshot" and s % cfg.rediscover_every == 0:
+                new_edge, rl_state, assigns = _rediscover(
+                    jax.random.fold_in(k_pipe, 100 + s), data,
+                    trust, p_fail, cfg, rl_state)
+                if cfg.exchange_on_rediscover:
+                    res = ex.run_exchange(
+                        jax.random.fold_in(k_pipe, 200 + s), data, labels,
+                        assigns, trust, new_edge, p_fail, ae_cfg,
+                        pcfg.exchange)
+                    data, labels = res.datasets, res.labels
+                    decisions = res.gate_decisions
+                    moved = int(np.asarray(res.moved_counts).sum())
+                prev_edge, in_edge = in_edge, new_edge
+                rediscovered = True
+
+        stragglers = stragglers_from(env.available)
+        fl = fl_train(k_fl, data, ae_cfg, flcfg, eval_data,
+                      stragglers=stragglers, init_carry=carry,
+                      start_iter=s * cfg.iters_per_segment,
+                      stop_iter=(s + 1) * cfg.iters_per_segment)
+        carry = fl.carry
+
+        sampled = pcfg.exchange.apply_channel_failure and rediscovered
+        pf, expected, realized = delivery_stats(
+            in_edge, p_fail, decisions if sampled else None)
+        seg_loss = (fl.eval_loss[-1] if fl.eval_loss.size else
+                    float(ae.recon_loss(carry.global_params, eval_data,
+                                        ae_cfg)))
+        trace.add(SegmentRecord(
+            segment=s, eval_loss=float(seg_loss),
+            in_edge=np.asarray(in_edge),
+            link_churn=link_churn(prev_edge if rediscovered and s > 0
+                                  else None, in_edge),
+            mean_pfail=pf, expected_delivery=expected,
+            realized_delivery=realized,
+            n_available=int(np.asarray(env.available).sum()),
+            moved=moved, rediscovered=rediscovered,
+            eval_iters=np.asarray(fl.eval_iters),
+            eval_curve=np.asarray(fl.eval_loss)))
+
+    return OrchestratorResult(trace, carry.global_params, carry, in_edge,
+                              env, data, labels, trace.eval_curve_iters,
+                              trace.eval_curve)

@@ -1,2 +1,2 @@
-from repro.fl.trainer import FLConfig, FLResult, fl_train, stack_clients  # noqa: F401
+from repro.fl.trainer import FLCarry, FLConfig, FLResult, fl_train, stack_clients  # noqa: F401
 from repro.fl.linear_eval import linear_evaluation  # noqa: F401

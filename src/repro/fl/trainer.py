@@ -15,6 +15,7 @@ matching the real system's collective structure.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -47,11 +48,28 @@ class FLConfig:
     adam_lr: float = 1e-3
 
 
+class FLCarry(NamedTuple):
+    """Full training state threaded through ``fl_train`` segments.
+
+    The online orchestrator (``repro.dynamics``) trains in segments —
+    FL rounds interleaved with channel evolution and graph re-discovery —
+    by passing the previous segment's carry back in.  Resumed training is
+    bit-for-bit identical to one uninterrupted run because round keys are
+    derived from the *total* horizon (``cfg.total_iters``), not from the
+    segment length."""
+    client_params: object        # stacked pytree, leading client axis
+    global_params: object        # server model
+    mu: object                   # Adam first moments (stacked)
+    nu: object                   # Adam second moments (stacked)
+    step: jax.Array              # () float32, local iteration counter
+
+
 class FLResult(NamedTuple):
     global_params: object
     eval_iters: np.ndarray       # (n_evals,)
     eval_loss: np.ndarray        # (n_evals,) global reconstruction loss
     client_params: object
+    carry: Optional[FLCarry] = None  # resume state for the next segment
 
 
 def _broadcast(params, n):
@@ -66,25 +84,16 @@ def _masked_mean(tree, mask):
         tree)
 
 
-def fl_train(key, datasets, ae_cfg: ae.AEConfig, cfg: FLConfig,
-             eval_data, stragglers: Sequence[int] = (),
-             init_params=None) -> FLResult:
-    """Run the FL task. datasets: per-client image arrays.
-
-    eval_data: (n_eval, H, W, C) held-out set for the global recon loss."""
-    n = len(datasets)
-    data, sizes = stack_clients(datasets)
-    agg_mask = jnp.asarray(
-        [0.0 if i in set(stragglers) else 1.0 for i in range(n)])
-
-    if init_params is None:
-        init_params = ae.init_ae(key, ae_cfg)
-    client_params = _broadcast(init_params, n)
-    global_params = init_params
-    zeros = jax.tree.map(jnp.zeros_like, client_params)
-    mu, nu = zeros, zeros
-    step0 = jnp.zeros((), jnp.float32)
-
+# Jitted once per (FLConfig, AEConfig, shape) signature — module-level so the
+# orchestrator's once-per-segment fl_train calls hit the jit cache instead of
+# recompiling the scanned round every segment.
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _round_fn(cfg: FLConfig, ae_cfg, carry, data, sizes, agg_mask,
+              keys_round):
+    """One aggregation round: ``tau_a`` scanned local iterations + a masked
+    parameter (or per-iteration gradient) mean and broadcast."""
+    cp, gp, mu, nu, t = carry
+    n = data.shape[0]
     loss_grad = jax.grad(ae.recon_loss)
 
     def local_grad(params_i, data_i, size_i, key_i, gparams):
@@ -110,43 +119,82 @@ def fl_train(key, datasets, ae_cfg: ae.AEConfig, cfg: FLConfig,
             / (jnp.sqrt(v / c2) + cfg.adam_eps), cp, mu, nu)
         return new, mu, nu
 
-    def round_body(carry, keys_round):
-        cp, gp, mu, nu, t = carry
+    def iter_body(state, key_t):
+        cp, mu, nu, t = state
+        t = t + 1.0
+        keys = jax.random.split(key_t, n)
+        grads = jax.vmap(local_grad, in_axes=(0, 0, 0, 0, None))(
+            cp, data, sizes, keys, gp)
+        if cfg.scheme == "fedsgd":
+            # aggregate gradients every iteration; all clients share
+            # the global model (stragglers' grads are dropped)
+            grads = _broadcast(_masked_mean(grads, agg_mask), n)
+        cp, mu, nu = apply_update(cp, grads, mu, nu, t)
+        return (cp, mu, nu, t), None
 
-        def iter_body(state, key_t):
-            cp, mu, nu, t = state
-            t = t + 1.0
-            keys = jax.random.split(key_t, n)
-            grads = jax.vmap(local_grad, in_axes=(0, 0, 0, 0, None))(
-                cp, data, sizes, keys, gp)
-            if cfg.scheme == "fedsgd":
-                # aggregate gradients every iteration; all clients share
-                # the global model (stragglers' grads are dropped)
-                grads = _broadcast(_masked_mean(grads, agg_mask), n)
-            cp, mu, nu = apply_update(cp, grads, mu, nu, t)
-            return (cp, mu, nu, t), None
+    (cp, mu, nu, t), _ = jax.lax.scan(iter_body, (cp, mu, nu, t), keys_round)
+    # aggregation at the end of the round (FedAvg/FedProx param mean)
+    gp_new = _masked_mean(cp, agg_mask)
+    cp = _broadcast(gp_new, n)
+    return FLCarry(cp, gp_new, mu, nu, t)
 
-        (cp, mu, nu, t), _ = jax.lax.scan(iter_body, (cp, mu, nu, t),
-                                          keys_round)
-        # aggregation at the end of the round (FedAvg/FedProx param mean)
-        gp_new = _masked_mean(cp, agg_mask)
-        cp = _broadcast(gp_new, n)
-        return (cp, gp_new, mu, nu, t), None
 
-    round_fn = jax.jit(round_body)
-    eval_loss_fn = jax.jit(lambda p: ae.recon_loss(p, eval_data, ae_cfg))
+@functools.partial(jax.jit, static_argnums=2)
+def _eval_loss_fn(params, eval_data, ae_cfg):
+    return ae.recon_loss(params, eval_data, ae_cfg)
 
+
+def fl_train(key, datasets, ae_cfg: ae.AEConfig, cfg: FLConfig,
+             eval_data, stragglers: Sequence[int] = (),
+             init_params=None, init_carry: Optional[FLCarry] = None,
+             start_iter: int = 0, stop_iter: Optional[int] = None) -> FLResult:
+    """Run the FL task. datasets: per-client image arrays.
+
+    eval_data: (n_eval, H, W, C) held-out set for the global recon loss.
+
+    Segmented training: ``init_carry`` (a previous :class:`FLCarry`) plus
+    ``start_iter``/``stop_iter`` run only the rounds in
+    ``[start_iter, stop_iter)`` of the full ``cfg.total_iters`` horizon.
+    Chaining segments end-to-end reproduces the uninterrupted run exactly
+    (same per-round keys, same eval schedule); datasets may change between
+    segments (e.g. after a D2D re-exchange) — only parameter shapes must
+    stay fixed."""
+    n = len(datasets)
+    data, sizes = stack_clients(datasets)
+    agg_mask = jnp.asarray(
+        [0.0 if i in set(stragglers) else 1.0 for i in range(n)])
+
+    if init_carry is not None:
+        client_params, global_params, mu, nu, step0 = init_carry
+    else:
+        if init_params is None:
+            init_params = ae.init_ae(key, ae_cfg)
+        client_params = _broadcast(init_params, n)
+        global_params = init_params
+        zeros = jax.tree.map(jnp.zeros_like, client_params)
+        mu, nu = zeros, zeros
+        step0 = jnp.zeros((), jnp.float32)
+
+    if start_iter % cfg.tau_a or (stop_iter is not None
+                                  and stop_iter % cfg.tau_a):
+        raise ValueError(
+            f"segment bounds [{start_iter}, {stop_iter}) must align to the "
+            f"aggregation interval tau_a={cfg.tau_a} — a segment boundary "
+            "inside a round would silently drop iterations")
     n_rounds = cfg.total_iters // cfg.tau_a
+    start_round = start_iter // cfg.tau_a
+    stop_round = n_rounds if stop_iter is None else \
+        min(stop_iter // cfg.tau_a, n_rounds)
     eval_iters, eval_losses = [], []
     keys = jax.random.split(jax.random.fold_in(key, 1), n_rounds)
-    carry = (client_params, global_params, mu, nu, step0)
-    for r in range(n_rounds):
+    carry = FLCarry(client_params, global_params, mu, nu, step0)
+    for r in range(start_round, stop_round):
         kr = jax.random.split(keys[r], cfg.tau_a)
-        carry, _ = round_fn(carry, kr)
+        carry = _round_fn(cfg, ae_cfg, carry, data, sizes, agg_mask, kr)
         it = (r + 1) * cfg.tau_a
         if it % cfg.eval_every == 0 or r == n_rounds - 1:
             eval_iters.append(it)
-            eval_losses.append(float(eval_loss_fn(carry[1])))
-    client_params, global_params = carry[0], carry[1]
-    return FLResult(global_params, np.asarray(eval_iters),
-                    np.asarray(eval_losses), client_params)
+            eval_losses.append(float(_eval_loss_fn(
+                carry.global_params, eval_data, ae_cfg)))
+    return FLResult(carry.global_params, np.asarray(eval_iters),
+                    np.asarray(eval_losses), carry.client_params, carry)

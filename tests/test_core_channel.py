@@ -1,0 +1,85 @@
+"""Channel model properties: P_D monotonicity, fading-step positivity and
+path-loss symmetry, mobility-step confinement, uniform_graph validity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel as CH
+from repro.core import qlearning as QL
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1.1, 50.0))
+def test_failure_prob_monotone_decreasing_in_rss(seed, scale):
+    w = CH.make_rss(jax.random.PRNGKey(seed), 7)
+    p = np.asarray(CH.failure_prob(w))
+    p_stronger = np.asarray(CH.failure_prob(w * scale))
+    off = ~np.eye(7, dtype=bool)
+    assert ((p >= 0) & (p <= 1)).all()
+    assert (p_stronger[off] <= p[off] + 1e-12).all()
+    # strict somewhere: scaling a finite RSS must actually help
+    assert (p_stronger[off] < p[off]).any()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_failure_prob_diag_is_one(seed):
+    w = CH.make_rss(jax.random.PRNGKey(seed), 5)
+    assert (np.diag(np.asarray(CH.failure_prob(w))) == 1.0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), rho=st.floats(0.0, 0.99),
+       sigma=st.floats(0.01, 2.0))
+def test_fading_step_positive_and_pathloss_symmetric(seed, rho, sigma):
+    key = jax.random.PRNGKey(seed)
+    kp, kf, ks = jax.random.split(key, 3)
+    pos = CH.make_positions(kp, 6)
+    fade = CH.init_fading(kf, 6)
+    for t in range(3):
+        fade = CH.fading_step(jax.random.fold_in(ks, t), fade, rho, sigma)
+        assert (np.asarray(fade) > 0).all(), "fading must stay positive"
+    # fading perturbs links, never the geometry: path loss stays symmetric
+    pl = np.asarray(CH.path_loss(pos))
+    np.testing.assert_allclose(pl, pl.T, rtol=1e-6)
+    w = np.asarray(CH.rss_from_state(pos, fade))
+    assert np.isinf(np.diag(w)).all()
+    off = ~np.eye(6, dtype=bool)
+    assert (w[off] > 0).all()
+
+
+def test_fading_step_rho_one_freezes():
+    fade = CH.init_fading(jax.random.PRNGKey(0), 5)
+    f2 = CH.fading_step(jax.random.PRNGKey(1), fade, 1.0, 0.6)
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(fade), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), step=st.floats(0.001, 0.3))
+def test_positions_step_stays_in_area(seed, step):
+    cfg = CH.ChannelConfig()
+    pos = CH.make_positions(jax.random.PRNGKey(seed), 8, cfg)
+    for t in range(4):
+        pos = CH.positions_step(jax.random.fold_in(
+            jax.random.PRNGKey(seed + 1), t), pos, step, cfg)
+    p = np.asarray(pos)
+    assert ((p >= 0.0) & (p <= cfg.area)).all()
+
+
+def test_rss_from_state_matches_one_shot_draw():
+    """Frozen-environment contract: make_rss == rss_from_state(env_init)."""
+    key = jax.random.PRNGKey(11)
+    w = CH.make_rss(key, 9)
+    kp, kf = jax.random.split(key)
+    w2 = CH.rss_from_state(CH.make_positions(kp, 9),
+                           CH.init_fading(kf, 9))
+    assert (np.asarray(w) == np.asarray(w2)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 40))
+def test_uniform_graph_never_self_links(seed, n):
+    g = np.asarray(QL.uniform_graph(jax.random.PRNGKey(seed), n))
+    assert (g != np.arange(n)).all()
+    assert ((g >= 0) & (g < n)).all()

@@ -1,0 +1,113 @@
+"""Dynamics subsystem: environment process, scenario registry, and the
+slow end-to-end orchestrator smoke run (tier-1, toy scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel as CH
+from repro.core.pipeline import PipelineConfig
+from repro.core.qlearning import RLConfig
+from repro.data import partition_by_classes
+from repro.data.synthetic import fmnist_like_split
+from repro.dynamics import (OrchestratorConfig, ScenarioConfig, env_init,
+                            env_step, available_scenarios, get_scenario,
+                            register_scenario, run_orchestrator,
+                            stragglers_from)
+from repro.fl import FLConfig
+from repro.models.autoencoder import AEConfig
+
+
+def test_registry_has_builtins_and_rejects_unknown():
+    names = available_scenarios()
+    for s in ("static", "fading", "mobility", "churn", "flash-crowd"):
+        assert s in names
+    with pytest.raises(KeyError):
+        get_scenario("not-a-scenario")
+    custom = register_scenario(ScenarioConfig("test-custom", churn_prob=0.5))
+    assert get_scenario("test-custom") is custom
+    assert get_scenario(custom) is custom  # config passes through
+
+
+def test_env_init_reproduces_one_shot_rss():
+    key = jax.random.PRNGKey(4)
+    env = env_init(key, 7)
+    assert (np.asarray(env.rss) == np.asarray(CH.make_rss(key, 7))).all()
+    assert np.asarray(env.available).all()
+
+
+def test_env_step_static_keeps_channel_frozen():
+    env = env_init(jax.random.PRNGKey(5), 6)
+    env2 = env_step(jax.random.PRNGKey(6), env, get_scenario("static"))
+    assert (np.asarray(env2.rss) == np.asarray(env.rss)).all()
+    assert int(env2.t) == 1
+
+
+def test_env_step_fading_changes_channel_not_positions():
+    env = env_init(jax.random.PRNGKey(7), 6)
+    env2 = env_step(jax.random.PRNGKey(8), env, get_scenario("fading"))
+    assert (np.asarray(env2.positions) == np.asarray(env.positions)).all()
+    off = ~np.eye(6, dtype=bool)
+    assert (np.asarray(env2.rss)[off] != np.asarray(env.rss)[off]).any()
+    assert (np.asarray(env2.fading) > 0).all()
+
+
+def test_env_step_churn_keeps_at_least_one_client():
+    scn = ScenarioConfig("drain", churn_prob=0.999)
+    env = env_init(jax.random.PRNGKey(9), 5, scn=scn)
+    for t in range(5):
+        env = env_step(jax.random.fold_in(jax.random.PRNGKey(10), t),
+                       env, scn)
+        assert np.asarray(env.available).sum() >= 1
+
+
+def test_flash_crowd_ramps_to_full_availability():
+    scn = get_scenario("flash-crowd")
+    env = env_init(jax.random.PRNGKey(11), 9, scn=scn)
+    counts = [int(np.asarray(env.available).sum())]
+    for t in range(scn.flash_ramp_segments + 1):
+        env = env_step(jax.random.fold_in(jax.random.PRNGKey(12), t),
+                       env, scn)
+        counts.append(int(np.asarray(env.available).sum()))
+    assert counts[0] < 9          # starts partial
+    assert counts == sorted(counts)  # monotone arrivals
+    assert counts[-1] == 9        # everyone eventually online
+
+
+def test_stragglers_from_mask():
+    assert stragglers_from(jnp.asarray([True, False, True, False])) == (1, 3)
+
+
+@pytest.mark.slow
+def test_orchestrator_smoke_two_segments_online():
+    """End-to-end: N=6 toy federation, 2 segments, fading scenario, online
+    re-discovery with channel-sampled re-exchange."""
+    ds, ev = fmnist_like_split(jax.random.PRNGKey(0), n_train_per_class=40,
+                               n_eval_per_class=10)
+    xs, ys, _ = partition_by_classes(0, ds.images, ds.labels, n_clients=6,
+                                     classes_per_client=3)
+    ae_cfg = AEConfig(28, 28, 1, widths=(4, 8), latent_dim=8)
+    from repro.core.exchange import ExchangeConfig
+    cfg = OrchestratorConfig(
+        n_segments=2, iters_per_segment=20, mode="online", burst_episodes=60,
+        pipeline=PipelineConfig(
+            rl=RLConfig(n_episodes=120, buffer_size=30),
+            exchange=ExchangeConfig(apply_channel_failure=True)),
+        fl=FLConfig(tau_a=10, eval_every=20, batch_size=16))
+    res = run_orchestrator(jax.random.PRNGKey(21), xs, ys, ae_cfg, cfg,
+                           "fading", ev.images)
+
+    assert len(res.trace.segments) == 2
+    s = res.trace.summary()
+    assert np.isfinite(res.eval_loss).all() and res.eval_loss.size > 0
+    assert s["n_rediscoveries"] == 2          # initial + segment-1 burst
+    assert 0.0 <= s["mean_link_churn"] <= 1.0
+    assert 0.0 <= s["mean_expected_delivery"] <= 1.0
+    n = len(xs)
+    edge = np.asarray(res.in_edge)
+    assert (edge != np.arange(n)).all() and ((edge >= 0) & (edge < n)).all()
+    # re-exchange may only grow datasets
+    for before, after in zip(xs, res.datasets):
+        assert after.shape[0] >= before.shape[0]
+    rec = res.trace.segments[1]
+    assert rec.rediscovered and rec.realized_delivery is not None

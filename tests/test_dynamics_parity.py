@@ -1,0 +1,120 @@
+"""Determinism contract of the online orchestrator: under the ``static``
+scenario with re-discovery disabled (mode="oneshot"), segmented simulation
+reproduces the one-shot ``run_pipeline`` + ``fl_train`` bit-for-bit."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.qlearning import RLConfig
+from repro.data import partition_by_classes
+from repro.data.synthetic import fmnist_like_split
+from repro.dynamics import OrchestratorConfig, run_orchestrator
+from repro.fl import FLConfig, fl_train
+from repro.models.autoencoder import AEConfig
+
+AE_CFG = AEConfig(28, 28, 1, widths=(4, 8), latent_dim=8)
+TOTAL_ITERS = 40
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds, ev = fmnist_like_split(jax.random.PRNGKey(0), n_train_per_class=40,
+                               n_eval_per_class=10)
+    xs, ys, _ = partition_by_classes(0, ds.images, ds.labels, n_clients=6,
+                                     classes_per_client=3)
+    return xs, ys, ev
+
+
+def _cfgs():
+    pcfg = PipelineConfig(rl=RLConfig(n_episodes=120, buffer_size=30))
+    flcfg = FLConfig(total_iters=TOTAL_ITERS, tau_a=10, eval_every=20,
+                     batch_size=16)
+    return pcfg, flcfg
+
+
+def test_static_oneshot_matches_pipeline_bit_for_bit(world):
+    xs, ys, ev = world
+    pcfg, flcfg = _cfgs()
+    key = jax.random.PRNGKey(42)
+
+    # reference: the pre-dynamics protocol, using the documented key split
+    k_pipe, _k_env, k_fl = jax.random.split(key, 3)
+    pipe = run_pipeline(k_pipe, xs, ys, AE_CFG, pcfg)
+    ref = fl_train(k_fl, pipe.datasets, AE_CFG, flcfg, ev.images)
+
+    ocfg = OrchestratorConfig(n_segments=2,
+                              iters_per_segment=TOTAL_ITERS // 2,
+                              mode="oneshot", pipeline=pcfg, fl=flcfg)
+    res = run_orchestrator(key, xs, ys, AE_CFG, ocfg, "static", ev.images)
+
+    np.testing.assert_array_equal(ref.eval_iters, res.eval_iters)
+    np.testing.assert_array_equal(ref.eval_loss, res.eval_loss)
+    for a, b in zip(jax.tree.leaves(ref.global_params),
+                    jax.tree.leaves(res.global_params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    # graph + exchanged datasets identical too
+    np.testing.assert_array_equal(np.asarray(pipe.in_edge),
+                                  np.asarray(res.in_edge))
+    assert len(pipe.datasets) == len(res.datasets)
+    for a, b in zip(pipe.datasets, res.datasets):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_segmented_fl_train_matches_uninterrupted(world):
+    """The carry refactor alone: fl_train in 2 chained segments equals one
+    uninterrupted run (no orchestrator, no exchange)."""
+    xs, _, ev = world
+    _, flcfg = _cfgs()
+    key = jax.random.PRNGKey(7)
+    ref = fl_train(key, xs, AE_CFG, flcfg, ev.images)
+
+    a = fl_train(key, xs, AE_CFG, flcfg, ev.images, stop_iter=20)
+    b = fl_train(key, xs, AE_CFG, flcfg, ev.images, init_carry=a.carry,
+                 start_iter=20)
+    np.testing.assert_array_equal(
+        ref.eval_loss, np.concatenate([a.eval_loss, b.eval_loss]))
+    for p, q in zip(jax.tree.leaves(ref.global_params),
+                    jax.tree.leaves(b.global_params)):
+        assert (np.asarray(p) == np.asarray(q)).all()
+
+
+def test_fl_train_default_unsegmented_unchanged(world):
+    """Default-arg fl_train returns the same curve as before the refactor
+    (regression guard: eval schedule + final-round forced eval)."""
+    xs, _, ev = world
+    cfg = FLConfig(total_iters=30, tau_a=10, eval_every=20, batch_size=16)
+    res = fl_train(jax.random.PRNGKey(3), xs, AE_CFG, cfg, ev.images)
+    # evals at it=20 (eval_every) and it=30 (forced final round)
+    np.testing.assert_array_equal(res.eval_iters, [20, 30])
+    assert res.carry is not None
+    for p, q in zip(jax.tree.leaves(res.carry.global_params),
+                    jax.tree.leaves(res.global_params)):
+        assert (np.asarray(p) == np.asarray(q)).all()
+
+
+def test_warm_start_rl_burst_continues_state():
+    """discover_graph(init_state=...) with an episode override runs a short
+    scan from the given state; cold vs warm results differ, and the warm
+    burst's diagnostics have the burst length."""
+    import jax.numpy as jnp
+
+    from repro.core import qlearning as QL
+    n = 8
+    key = jax.random.PRNGKey(2)
+    best = (jnp.arange(n) + 3) % n
+    local_r = jnp.full((n, n), 0.1)
+    local_r = local_r.at[jnp.arange(n), best].set(5.0)
+    local_r = local_r.at[jnp.arange(n), jnp.arange(n)].set(-1e9)
+    cfg = QL.RLConfig(n_episodes=300, buffer_size=30)
+    full = QL.discover_graph(key, local_r, jnp.zeros((n, n)), cfg)
+    assert full.state is not None
+    burst = QL.discover_graph(jax.random.fold_in(key, 1), local_r,
+                              jnp.zeros((n, n)), cfg,
+                              init_state=full.state, n_episodes=60)
+    assert burst.ep_mean_local.shape == (60,)
+    # warm burst keeps the already-converged links on the easy bandit
+    hits = int(jnp.sum(burst.in_edge == best))
+    assert hits >= n - 1
