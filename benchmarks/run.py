@@ -21,7 +21,8 @@ import traceback
 
 from benchmarks import (beyond_paper, dryrun_table, dynamic_scenarios,
                         fig3_heatmap, fig4_links, fig5_convergence,
-                        fig6_stragglers, kernel_bench, roofline_table)
+                        fig6_stragglers, kernel_bench, roofline_table,
+                        shard_scaling)
 
 BENCHES = {
     "fig3": fig3_heatmap.main,
@@ -33,6 +34,7 @@ BENCHES = {
     "dryrun": dryrun_table.main,
     "beyond": beyond_paper.main,
     "dynamic": dynamic_scenarios.main,
+    "shard": shard_scaling.main,
 }
 
 # a result row: bench_name,<int-or-float us>,<derived k=v fields>

@@ -13,19 +13,27 @@ axis instead:
   * :func:`stack_pytrees` stacks a list of per-client parameter pytrees into
     one pytree with a leading client axis, ready for ``jax.vmap``.
 
-On a mesh the leading client axis is the natural shard axis ("data");
-aggregations over it lower to all-reduces.
+Every stacker takes an optional ``rules`` (:class:`repro.sharding
+.ShardingRules`): the stack is then *placed* with its leading client axis
+sharded over the data-parallel mesh product (``CLIENTS`` -> ("pod", "data"))
+instead of landing on one device — per-client work stays local to the
+client's shard and cross-client aggregations lower to all-reduces.  A client
+count that does not divide the mesh degrades to replication (see
+``ShardingRules.spec``); ``rules=None`` is the single-device identity.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sharding as sh
 
-def stack_clients(datasets: Sequence) -> tuple[jax.Array, jax.Array]:
+
+def stack_clients(datasets: Sequence, rules: Optional[sh.ShardingRules] = None
+                  ) -> tuple[jax.Array, jax.Array]:
     """Pad per-client arrays to a common length; returns (data, sizes).
 
     Padding tiles each client's data cyclically so every row is a real
@@ -33,6 +41,7 @@ def stack_clients(datasets: Sequence) -> tuple[jax.Array, jax.Array]:
     :func:`valid_mask` for reductions that must weight each real sample
     exactly once.  Assembly happens host-side in numpy — one device
     transfer for the whole stack instead of ~2N small tile/stack dispatches.
+    With ``rules`` the transfer lands client-sharded over the mesh.
     """
     sizes_np = np.asarray([d.shape[0] for d in datasets], np.int32)
     max_n = int(sizes_np.max())
@@ -42,18 +51,24 @@ def stack_clients(datasets: Sequence) -> tuple[jax.Array, jax.Array]:
         reps = -(-max_n // d.shape[0])
         tiled = np.tile(d, (reps,) + (1,) * (d.ndim - 1))[:max_n]
         padded.append(tiled)
+    if rules is not None:
+        data, sizes = sh.shard_clients((np.stack(padded), sizes_np), rules)
+        return data, sizes
     return jnp.asarray(np.stack(padded)), jnp.asarray(sizes_np)
 
 
-def valid_mask(sizes, max_n: int, dtype=jnp.float32) -> jax.Array:
+def valid_mask(sizes, max_n: int, dtype=jnp.float32,
+               rules: Optional[sh.ShardingRules] = None) -> jax.Array:
     """(N,) sizes -> (N, max_n) mask selecting each client's real samples."""
-    return (jnp.arange(max_n)[None, :] < jnp.asarray(sizes)[:, None]).astype(
+    mask = (jnp.arange(max_n)[None, :] < jnp.asarray(sizes)[:, None]).astype(
         dtype)
+    return sh.shard_clients(mask, rules)
 
 
-def stack_pytrees(trees: Sequence):
+def stack_pytrees(trees: Sequence, rules: Optional[sh.ShardingRules] = None):
     """[tree_0, ..., tree_{N-1}] -> one tree with a leading client axis."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    return sh.shard_clients(jax.tree.map(lambda *xs: jnp.stack(xs), *trees),
+                            rules)
 
 
 def unstack_pytree(tree, n: int) -> list:

@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sharding as sh
 from repro.core import batching
 from repro.kernels import ops
 from repro.models import autoencoder as ae
@@ -85,27 +86,40 @@ def pretrain_autoencoders(key, datasets, ae_cfg, cfg: ExchangeConfig):
     return params_list
 
 
-def pretrain_autoencoders_batched(key, datasets, ae_cfg, cfg: ExchangeConfig):
+# Module-level jit: the online orchestrator re-exchanges every segment and
+# previously paid a full retrace per call (the step was a closure defined
+# inside the pretrain function).  (ae_cfg, lr, rules) key the cache.
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def _pretrain_step(p, x, m, ae_cfg, lr, rules):
+    p = sh.constrain_clients(p, rules)
+    x = sh.constrain_clients(x, rules)
+    m = sh.constrain_clients(m, rules)
+    g = jax.vmap(
+        lambda pp, xx, mm: jax.grad(ae.masked_recon_loss)(pp, xx, mm, ae_cfg)
+    )(p, x, m)
+    new = jax.tree.map(lambda pp, gg: pp - lr * gg, p, g)
+    return sh.constrain_clients(new, rules)
+
+
+def pretrain_autoencoders_batched(key, datasets, ae_cfg, cfg: ExchangeConfig,
+                                  rules: sh.ShardingRules | None = None):
     """All N clients in one jit: vmapped init + vmapped masked-mean grads
     over the padded client stack.  Returns a stacked-params pytree with a
     leading client axis.  Per-client keys and the masked loss match the
-    reference path's math exactly (padding carries zero weight)."""
-    data, sizes = batching.stack_clients(datasets)
+    reference path's math exactly (padding carries zero weight).  With
+    ``rules`` the client stack (data, masks, params) shards over the mesh;
+    pretraining has no cross-client reduction, so each shard trains its
+    clients entirely locally."""
+    data, sizes = batching.stack_clients(datasets, rules)
     n, max_n = data.shape[:2]
-    mask = batching.valid_mask(sizes, max_n)
-    keys = jax.random.split(key, n)
-    params = jax.vmap(lambda k: ae.init_ae(k, ae_cfg))(keys)
-
-    grad_fn = jax.vmap(
-        lambda p, x, m: jax.grad(ae.masked_recon_loss)(p, x, m, ae_cfg))
-
-    @jax.jit
-    def step(p, x, m):
-        g = grad_fn(p, x, m)
-        return jax.tree.map(lambda pp, gg: pp - cfg.pretrain_lr * gg, p, g)
+    mask = batching.valid_mask(sizes, max_n, rules=rules)
+    keys = sh.shard_clients(jax.random.split(key, n), rules)
+    params = sh.shard_clients(
+        jax.vmap(lambda k: ae.init_ae(k, ae_cfg))(keys), rules)
 
     for _ in range(cfg.pretrain_steps):
-        params = step(params, data, mask)
+        params = _pretrain_step(params, data, mask, ae_cfg,
+                                cfg.pretrain_lr, rules)
     return params
 
 
@@ -181,15 +195,26 @@ def _gate_loop(datasets, labels, trust, in_edge, sel, fail_u, p_fail,
                           moved, decisions)
 
 
-@functools.partial(jax.jit, static_argnums=(9, 10))
+@functools.partial(jax.jit, static_argnums=(9, 10, 11))
 def _gate_scores(params, own, own_mask, cand, cand_mask, allowed, fail_u,
-                 p_fail, in_edge, ae_cfg, apply_channel):
+                 p_fail, in_edge, ae_cfg, apply_channel, rules=None):
     """One device program scoring the whole gate.
 
     params: stacked AE pytree (leading client axis); own: (N, M, H, W, C)
     padded client stack with own_mask (N, M); cand: (N, K, R, H, W, C)
     receiver-aligned reserve tensor with cand_mask (N, K, R).
-    Returns (base (N,), scores (N, K), fail (N,), accept (N, K))."""
+    Returns (base (N,), scores (N, K), fail (N,), accept (N, K)).
+
+    With ``rules`` every operand keeps its leading client axis pinned to the
+    mesh: per-(receiver, cluster) scoring is embarrassingly parallel over
+    receivers, so each shard scores its own clients with zero collectives —
+    sharded output bits match the single-device program exactly.
+    """
+    params, own, own_mask, cand, cand_mask, allowed, fail_u, in_edge = \
+        sh.constrain_clients(
+            (params, own, own_mask, cand, cand_mask, allowed, fail_u,
+             in_edge), rules)
+    p_fail = sh.constrain_clients(p_fail, rules)
     n, max_n = own.shape[:2]
     k, r = cand.shape[1:3]
 
@@ -211,13 +236,21 @@ def _gate_scores(params, own, own_mask, cand, cand_mask, allowed, fail_u,
     return base, scores, fail, accept
 
 
-def _gate_batched(datasets, labels, trust, in_edge, sel, fail_u, p_fail,
-                  params, ae_cfg, cfg: ExchangeConfig) -> ExchangeResult:
-    n = len(datasets)
-    k_max = max(t.shape[1] for t in trust)
-    r = cfg.reserve_per_cluster
-    data_np = [np.asarray(d) for d in datasets]
-    labels_np = [np.asarray(l) for l in labels]
+def _assemble_gate_inputs(data_np, trust_np, in_edge, sel, fail_u, p_fail,
+                          r: int, rules: sh.ShardingRules | None = None):
+    """Host-side assembly of the gate engine's device operands.
+
+    ``data_np``/``trust_np`` are the *already materialised* per-client numpy
+    arrays (callers hold them for the ragged concat anyway — converting here
+    too would double the device-to-host transfer of every client dataset).
+    Returns (own, own_mask, cand, cand_mask, allowed, fail_u, p_fail,
+    in_edge) ready for :func:`_gate_scores` — each with its leading client
+    axis placed per ``rules``.  The reserve tensor is gathered receiver-side
+    *before* the transfer, so on a mesh every shard receives only its own
+    receivers' candidates.
+    """
+    n = len(data_np)
+    k_max = max(t.shape[1] for t in trust_np)
     sample_shape = data_np[0].shape[1:]
 
     # masked per-transmitter reserve tensor, gathered receiver-side
@@ -232,7 +265,6 @@ def _gate_batched(datasets, labels, trust, in_edge, sel, fail_u, p_fail,
     cand = res_data[in_edge]
     cand_mask = res_mask[in_edge]
 
-    trust_np = [np.asarray(t) for t in trust]
     allowed = np.zeros((n, k_max), bool)
     for i in range(n):
         j = int(in_edge[i])
@@ -241,12 +273,29 @@ def _gate_batched(datasets, labels, trust, in_edge, sel, fail_u, p_fail,
         allowed[i, :trust_np[j].shape[1]] = trust_np[j][i] != 0
     allowed &= cand_mask.any(-1)
 
-    own, sizes = batching.stack_clients(datasets)
-    own_mask = batching.valid_mask(sizes, own.shape[1])
+    own, sizes = batching.stack_clients(data_np, rules)
+    own_mask = batching.valid_mask(sizes, own.shape[1], rules=rules)
+    cand, cand_mask, allowed, fail_u, p_fail, in_edge = sh.shard_clients(
+        (cand, cand_mask, allowed, fail_u, p_fail, in_edge), rules)
+    return own, own_mask, cand, cand_mask, allowed, fail_u, p_fail, in_edge
+
+
+def _gate_batched(datasets, labels, trust, in_edge, sel, fail_u, p_fail,
+                  params, ae_cfg, cfg: ExchangeConfig,
+                  rules: sh.ShardingRules | None = None) -> ExchangeResult:
+    n = len(datasets)
+    data_np = [np.asarray(d) for d in datasets]
+    labels_np = [np.asarray(l) for l in labels]
+    trust_np = [np.asarray(t) for t in trust]
+
+    (own, own_mask, cand, cand_mask, allowed, fail_u_d, p_fail_d,
+     in_edge_d) = _assemble_gate_inputs(data_np, trust_np, in_edge, sel,
+                                        fail_u, p_fail,
+                                        cfg.reserve_per_cluster, rules)
     _, _, fail, accept = _gate_scores(
-        params, own, own_mask, jnp.asarray(cand), jnp.asarray(cand_mask),
-        jnp.asarray(allowed), jnp.asarray(fail_u), jnp.asarray(p_fail),
-        jnp.asarray(in_edge), ae_cfg, cfg.apply_channel_failure)
+        params, own, own_mask, cand, cand_mask, allowed, fail_u_d, p_fail_d,
+        in_edge_d, ae_cfg, cfg.apply_channel_failure, rules)
+    in_edge = np.asarray(in_edge)
     fail = np.asarray(fail)
     accept = np.asarray(accept)
 
@@ -286,7 +335,8 @@ def _gate_batched(datasets, labels, trust, in_edge, sel, fail_u, p_fail,
 
 def run_exchange(key, datasets, labels, assignments, trust, in_edge, p_fail,
                  ae_cfg, cfg: ExchangeConfig = ExchangeConfig(),
-                 ae_params=None, method: str | None = None) -> ExchangeResult:
+                 ae_params=None, method: str | None = None,
+                 rules: sh.ShardingRules | None = None) -> ExchangeResult:
     """Execute Algorithm 2's data-plane step over the discovered graph.
 
     datasets/labels: per-client arrays; assignments: per-client (n_i,)
@@ -294,6 +344,9 @@ def run_exchange(key, datasets, labels, assignments, trust, in_edge, p_fail,
     ``method`` (default ``cfg.method``) picks the data plane — see the
     module docstring.  ``ae_params`` may be a per-client list or a stacked
     pytree; omitted, it is pretrained here from the exchange key.
+    ``rules`` shards the batched plane's client axis over the mesh (ignored
+    by the reference loop plane); mesh=1 placement is bit-identical to the
+    unsharded program.
     """
     method = (method or cfg.method).lower()
     n = len(datasets)
@@ -313,8 +366,8 @@ def run_exchange(key, datasets, labels, assignments, trust, in_edge, p_fail,
     if method != "batched":
         raise ValueError(f"unknown exchange method: {method!r}")
     params = ae_params if ae_params is not None else \
-        pretrain_autoencoders_batched(k_pre, datasets, ae_cfg, cfg)
+        pretrain_autoencoders_batched(k_pre, datasets, ae_cfg, cfg, rules)
     if isinstance(params, (list, tuple)):
-        params = batching.stack_pytrees(list(params))
+        params = batching.stack_pytrees(list(params), rules)
     return _gate_batched(datasets, labels, trust, in_edge, sel, fail_u,
-                         p_fail, params, ae_cfg, cfg)
+                         p_fail, params, ae_cfg, cfg, rules)

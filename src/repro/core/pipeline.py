@@ -88,7 +88,8 @@ def cluster_clients(key, datasets, cfg: PipelineConfig):
 
 def run_pipeline(key, datasets, labels, ae_cfg: AEConfig,
                  cfg: PipelineConfig = PipelineConfig(),
-                 in_edge=None, exchange_method=None, rss=None) -> PipelineResult:
+                 in_edge=None, exchange_method=None, rss=None,
+                 rules=None) -> PipelineResult:
     """Full smart-exchange. Pass ``in_edge`` to skip RL (e.g. uniform
     baseline graphs) while keeping the same exchange machinery.
 
@@ -98,7 +99,10 @@ def run_pipeline(key, datasets, labels, ae_cfg: AEConfig,
 
     ``rss`` supplies a precomputed channel snapshot (the dynamics
     orchestrator owns the channel state); omitted, one is drawn from the
-    pipeline key exactly as before."""
+    pipeline key exactly as before.
+
+    ``rules`` (:class:`repro.sharding.ShardingRules`) shards the exchange
+    engine's client axis over the mesh — see ``core/exchange.py``."""
     k_cl, k_tr, k_ch, k_rl, k_ex = split_pipeline_keys(key)
     n = len(datasets)
 
@@ -123,7 +127,7 @@ def run_pipeline(key, datasets, labels, ae_cfg: AEConfig,
 
     res = ex.run_exchange(k_ex, datasets, labels, assigns, trust, in_edge,
                           p_fail, ae_cfg, cfg.exchange,
-                          method=exchange_method)
+                          method=exchange_method, rules=rules)
 
     # Recompute dissimilarity on the post-exchange datasets (paper Fig. 3).
     _, cents_after, _ = cluster_clients(k_cl, res.datasets, cfg)

@@ -48,12 +48,52 @@ def link_churn(prev_edge, in_edge) -> float:
     return float(np.mean(prev_edge != in_edge))
 
 
+def link_churn_dev(prev_edge, in_edge):
+    """:func:`link_churn` as a device scalar — no host sync; the
+    orchestrator defers materialisation to one transfer per run."""
+    import jax.numpy as jnp
+    if prev_edge is None:
+        return jnp.zeros(())
+    return jnp.mean((jnp.asarray(prev_edge)
+                     != jnp.asarray(in_edge)).astype(jnp.float32))
+
+
+def delivery_stats_dev(in_edge, p_fail):
+    """(mean_pfail, expected_delivery) as device scalars over the chosen
+    non-self links; matches :func:`delivery_stats` (realized delivery still
+    derives host-side from the exchange's gate decisions)."""
+    import jax.numpy as jnp
+    in_edge = jnp.asarray(in_edge)
+    n = in_edge.shape[0]
+    live = in_edge != jnp.arange(n)
+    n_live = jnp.sum(live)
+    pf_live = jnp.sum(jnp.where(
+        live, jnp.asarray(p_fail)[jnp.arange(n), in_edge], 0.0))
+    pf = jnp.where(n_live > 0, pf_live / jnp.maximum(n_live, 1), 1.0)
+    expected = jnp.where(n_live > 0, 1.0 - pf, 0.0)
+    return pf, expected
+
+
+def realized_delivery(in_edge, decisions) -> Optional[float]:
+    """Fraction of live links that delivered, from the exchange's
+    ``gate_decisions`` — entries ``(rx, tx, cluster, accepted)`` with
+    ``cluster == -1`` marking a link whose sampled channel failed.
+    None when no sampling ran (``decisions`` is None) or no link is live."""
+    if decisions is None:
+        return None
+    in_edge = np.asarray(in_edge)
+    live = in_edge != np.arange(in_edge.shape[0])
+    if not live.any():
+        return None
+    failed_rx = {d[0] for d in decisions if d[2] == -1}
+    return 1.0 - len(failed_rx) / max(int(live.sum()), 1)
+
+
 def delivery_stats(in_edge, p_fail, decisions=None):
     """(mean_pfail, expected, realized) for the chosen links.
 
-    decisions: the exchange's ``gate_decisions`` — entries
-    ``(rx, tx, cluster, accepted)`` with ``cluster == -1`` marking a link
-    whose sampled channel failed.  None when no channel sampling ran."""
+    decisions: see :func:`realized_delivery`; None when no channel
+    sampling ran."""
     in_edge = np.asarray(in_edge)
     p_fail = np.asarray(p_fail)
     n = in_edge.shape[0]
@@ -61,11 +101,7 @@ def delivery_stats(in_edge, p_fail, decisions=None):
     if not live.any():
         return 1.0, 0.0, None
     pf = float(np.mean(p_fail[np.arange(n)[live], in_edge[live]]))
-    realized = None
-    if decisions is not None:
-        failed_rx = {d[0] for d in decisions if d[2] == -1}
-        realized = 1.0 - len(failed_rx) / max(int(live.sum()), 1)
-    return pf, 1.0 - pf, realized
+    return pf, 1.0 - pf, realized_delivery(in_edge, decisions)
 
 
 class Trace:

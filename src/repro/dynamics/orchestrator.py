@@ -23,6 +23,14 @@ Three modes, matching the benchmark baselines:
                 the ablation separating "any re-exchange helps" from
                 "RL-chosen links help".
 
+Device residency: channel state (``EnvState``), the FL carry, the graph and
+availability masks stay on device across segments; per-segment metrics
+(eval loss, churn, delivery, availability) are accumulated as *deferred*
+device scalars and materialised in a single transfer after the last segment
+— the only host round-trips inside the loop are the exchange's inherently
+ragged reserve assembly on re-discovery segments.  Pass ``rules`` to shard
+every client-stacked tensor (FL carry, exchange stacks) over the mesh.
+
 Determinism contract (tested in ``tests/test_dynamics_parity.py``): under
 the ``static`` scenario with mode ``"oneshot"``, the run is bit-for-bit
 ``run_pipeline(k_pipe) + fl_train(k_fl)`` where
@@ -34,6 +42,7 @@ import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dissimilarity as ds
@@ -43,12 +52,12 @@ from repro.core import rewards as rw
 from repro.core.channel import failure_prob
 from repro.core.pipeline import (PipelineConfig, cluster_clients,
                                  run_pipeline, split_pipeline_keys)
-from repro.dynamics.environment import env_init, env_step, stragglers_from
-from repro.dynamics.metrics import (SegmentRecord, Trace, delivery_stats,
-                                    link_churn)
+from repro.dynamics.environment import env_init, env_step
+from repro.dynamics.metrics import (SegmentRecord, Trace,
+                                    delivery_stats_dev, link_churn_dev,
+                                    realized_delivery)
 from repro.dynamics.scenarios import get_scenario
-from repro.fl.trainer import FLConfig, fl_train
-from repro.models import autoencoder as ae
+from repro.fl.trainer import FLConfig, eval_global_loss, fl_train
 
 MODES = ("oneshot", "online", "uniform")
 
@@ -103,9 +112,21 @@ def _rediscover(key, data, trust, p_fail, cfg: OrchestratorConfig,
     return graph.in_edge, graph.state, assigns
 
 
+class _PendingSegment(NamedTuple):
+    """One segment's metrics before materialisation: ``dev`` holds deferred
+    device scalars/arrays, the rest is host metadata known synchronously."""
+    segment: int
+    rediscovered: bool
+    moved: int
+    realized_delivery: Optional[float]
+    eval_iters: np.ndarray
+    dev: dict
+
+
 def run_orchestrator(key, datasets, labels, ae_cfg,
                      cfg: OrchestratorConfig = OrchestratorConfig(),
-                     scenario="static", eval_data=None) -> OrchestratorResult:
+                     scenario="static", eval_data=None,
+                     rules=None) -> OrchestratorResult:
     """Simulate a deployment: ``cfg.n_segments`` FL segments over an
     evolving environment (see module docstring for the protocol)."""
     if cfg.mode not in MODES:
@@ -135,7 +156,7 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
         # same convention as the one-shot uniform baseline (benchmarks)
         init_edge = ql.uniform_graph(jax.random.fold_in(k_pipe, 7), n)
     pipe = run_pipeline(k_pipe, datasets, labels, ae_cfg, pcfg,
-                        in_edge=init_edge, rss=env.rss)
+                        in_edge=init_edge, rss=env.rss, rules=rules)
 
     data, labels = pipe.datasets, pipe.labels
     trust = pipe.trust
@@ -145,7 +166,7 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
     decisions = pipe.exchange.gate_decisions
     moved = int(np.asarray(pipe.moved_counts).sum())
 
-    trace = Trace()
+    pending: list[_PendingSegment] = []
     carry = None
     prev_edge = None
     for s in range(cfg.n_segments):
@@ -163,37 +184,55 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
                     res = ex.run_exchange(
                         jax.random.fold_in(k_pipe, 200 + s), data, labels,
                         assigns, trust, new_edge, p_fail, ae_cfg,
-                        pcfg.exchange)
+                        pcfg.exchange, rules=rules)
                     data, labels = res.datasets, res.labels
                     decisions = res.gate_decisions
                     moved = int(np.asarray(res.moved_counts).sum())
                 prev_edge, in_edge = in_edge, new_edge
                 rediscovered = True
 
-        stragglers = stragglers_from(env.available)
         fl = fl_train(k_fl, data, ae_cfg, flcfg, eval_data,
-                      stragglers=stragglers, init_carry=carry,
+                      avail_mask=env.available, init_carry=carry,
                       start_iter=s * cfg.iters_per_segment,
-                      stop_iter=(s + 1) * cfg.iters_per_segment)
+                      stop_iter=(s + 1) * cfg.iters_per_segment,
+                      rules=rules, defer_metrics=True)
         carry = fl.carry
 
         sampled = pcfg.exchange.apply_channel_failure and rediscovered
-        pf, expected, realized = delivery_stats(
-            in_edge, p_fail, decisions if sampled else None)
+        realized = realized_delivery(in_edge, decisions) if sampled else None
+        pf_dev, expected_dev = delivery_stats_dev(in_edge, p_fail)
         seg_loss = (fl.eval_loss[-1] if fl.eval_loss.size else
-                    float(ae.recon_loss(carry.global_params, eval_data,
-                                        ae_cfg)))
+                    eval_global_loss(carry.global_params, eval_data, ae_cfg))
+        pending.append(_PendingSegment(
+            segment=s, rediscovered=rediscovered, moved=moved,
+            realized_delivery=realized, eval_iters=np.asarray(fl.eval_iters),
+            dev={
+                "eval_loss": seg_loss,
+                "in_edge": jnp.asarray(in_edge),
+                "link_churn": link_churn_dev(
+                    prev_edge if rediscovered and s > 0 else None, in_edge),
+                "mean_pfail": pf_dev,
+                "expected_delivery": expected_dev,
+                "n_available": jnp.sum(env.available),
+                "eval_curve": fl.eval_loss,
+            }))
+
+    # One host transfer for every per-segment metric of the whole run: the
+    # loop above never blocked on a device value (sans exchange host work).
+    host = jax.device_get([p.dev for p in pending])
+    trace = Trace()
+    for p, h in zip(pending, host):
         trace.add(SegmentRecord(
-            segment=s, eval_loss=float(seg_loss),
-            in_edge=np.asarray(in_edge),
-            link_churn=link_churn(prev_edge if rediscovered and s > 0
-                                  else None, in_edge),
-            mean_pfail=pf, expected_delivery=expected,
-            realized_delivery=realized,
-            n_available=int(np.asarray(env.available).sum()),
-            moved=moved, rediscovered=rediscovered,
-            eval_iters=np.asarray(fl.eval_iters),
-            eval_curve=np.asarray(fl.eval_loss)))
+            segment=p.segment, eval_loss=float(h["eval_loss"]),
+            in_edge=np.asarray(h["in_edge"]),
+            link_churn=float(h["link_churn"]),
+            mean_pfail=float(h["mean_pfail"]),
+            expected_delivery=float(h["expected_delivery"]),
+            realized_delivery=p.realized_delivery,
+            n_available=int(h["n_available"]),
+            moved=p.moved, rediscovered=p.rediscovered,
+            eval_iters=p.eval_iters,
+            eval_curve=np.asarray(h["eval_curve"])))
 
     return OrchestratorResult(trace, carry.global_params, carry, in_edge,
                               env, data, labels, trace.eval_curve_iters,

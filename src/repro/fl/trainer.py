@@ -8,9 +8,14 @@ keep training locally but are excluded from aggregation (paper Fig. 6).
 
 Vectorisation: client parameters are one stacked pytree with a leading
 client axis, client datasets are padded into one (N, max_n, H, W, C) array,
-and a whole aggregation round is a single jitted `lax.scan` — on a mesh the
-client axis shards over "data" and aggregation lowers to an all-reduce,
-matching the real system's collective structure.
+and a whole aggregation round is a single jitted `lax.scan`.  Pass
+``rules`` (:class:`repro.sharding.ShardingRules`) and the client axis
+shards over the data-parallel mesh product: local steps stay shard-local,
+the masked FedAvg/FedSGD mean lowers to an all-reduce over the client axis,
+and the broadcast back is a replicated constraint — the collective
+structure of the real system.  The round's carry is donated
+(``donate_argnums``), so segmented training updates parameters and Adam
+moments in place instead of double-buffering them every round.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sharding as sh
 from repro.core.batching import stack_clients  # noqa: F401  (re-exported)
 from repro.models import autoencoder as ae
 
@@ -56,7 +62,12 @@ class FLCarry(NamedTuple):
     by passing the previous segment's carry back in.  Resumed training is
     bit-for-bit identical to one uninterrupted run because round keys are
     derived from the *total* horizon (``cfg.total_iters``), not from the
-    segment length."""
+    segment length.
+
+    A carry handed to ``fl_train`` as ``init_carry`` is *consumed*: the
+    round function donates its buffers to the next round, so the passed-in
+    arrays are invalid afterwards.  Hold on to the returned
+    ``FLResult.carry`` instead."""
     client_params: object        # stacked pytree, leading client axis
     global_params: object        # server model
     mu: object                   # Adam first moments (stacked)
@@ -65,6 +76,10 @@ class FLCarry(NamedTuple):
 
 
 class FLResult(NamedTuple):
+    """``global_params``/``client_params`` alias the buffers of ``carry`` —
+    once ``carry`` is handed to a later ``fl_train(init_carry=...)`` call
+    (which donates it), this result's params are deleted with it.  Read or
+    copy them first; eval_* are host arrays and always survive."""
     global_params: object
     eval_iters: np.ndarray       # (n_evals,)
     eval_loss: np.ndarray        # (n_evals,) global reconstruction loss
@@ -84,17 +99,32 @@ def _masked_mean(tree, mask):
         tree)
 
 
-# Jitted once per (FLConfig, AEConfig, shape) signature — module-level so the
-# orchestrator's once-per-segment fl_train calls hit the jit cache instead of
-# recompiling the scanned round every segment.
-@functools.partial(jax.jit, static_argnums=(0, 1))
+# Jitted once per (FLConfig, AEConfig, rules, shape) signature — module-level
+# so the orchestrator's once-per-segment fl_train calls hit the jit cache
+# instead of recompiling the scanned round every segment.  The carry is
+# donated: client params + Adam moments are the dominant live buffers and a
+# round only ever needs one generation of them.
+@functools.partial(jax.jit, static_argnums=(0, 1, 7), donate_argnums=(2,))
 def _round_fn(cfg: FLConfig, ae_cfg, carry, data, sizes, agg_mask,
-              keys_round):
+              keys_round, rules=None):
     """One aggregation round: ``tau_a`` scanned local iterations + a masked
     parameter (or per-iteration gradient) mean and broadcast."""
     cp, gp, mu, nu, t = carry
     n = data.shape[0]
     loss_grad = jax.grad(ae.recon_loss)
+
+    def cl(tree):   # pin the leading client axis to the mesh
+        return sh.constrain_clients(tree, rules)
+
+    def rep(tree):  # pin server-side tensors replicated (forces the
+        if rules is None:   # all-reduce at the aggregation point)
+            return tree
+        return jax.tree.map(
+            lambda p: sh.constrain(p, rules, (None,) * p.ndim), tree)
+
+    cp, mu, nu, data, sizes, agg_mask = cl((cp, mu, nu, data, sizes,
+                                            agg_mask))
+    gp = rep(gp)
 
     def local_grad(params_i, data_i, size_i, key_i, gparams):
         idx = jax.random.randint(key_i, (cfg.batch_size,), 0, size_i)
@@ -122,20 +152,21 @@ def _round_fn(cfg: FLConfig, ae_cfg, carry, data, sizes, agg_mask,
     def iter_body(state, key_t):
         cp, mu, nu, t = state
         t = t + 1.0
-        keys = jax.random.split(key_t, n)
+        keys = cl(jax.random.split(key_t, n))
         grads = jax.vmap(local_grad, in_axes=(0, 0, 0, 0, None))(
             cp, data, sizes, keys, gp)
         if cfg.scheme == "fedsgd":
             # aggregate gradients every iteration; all clients share
             # the global model (stragglers' grads are dropped)
-            grads = _broadcast(_masked_mean(grads, agg_mask), n)
-        cp, mu, nu = apply_update(cp, grads, mu, nu, t)
-        return (cp, mu, nu, t), None
+            grads = cl(_broadcast(rep(_masked_mean(grads, agg_mask)), n))
+        cp, mu, nu = apply_update(cp, cl(grads), mu, nu, t)
+        return (cl(cp), mu, nu, t), None
 
     (cp, mu, nu, t), _ = jax.lax.scan(iter_body, (cp, mu, nu, t), keys_round)
-    # aggregation at the end of the round (FedAvg/FedProx param mean)
-    gp_new = _masked_mean(cp, agg_mask)
-    cp = _broadcast(gp_new, n)
+    # aggregation at the end of the round (FedAvg/FedProx param mean):
+    # a cross-shard reduction over the client axis — the all-reduce
+    gp_new = rep(_masked_mean(cp, agg_mask))
+    cp = cl(_broadcast(gp_new, n))
     return FLCarry(cp, gp_new, mu, nu, t)
 
 
@@ -144,10 +175,18 @@ def _eval_loss_fn(params, eval_data, ae_cfg):
     return ae.recon_loss(params, eval_data, ae_cfg)
 
 
+def eval_global_loss(params, eval_data, ae_cfg):
+    """Jitted global reconstruction loss, returned as a device scalar (no
+    host sync) — the orchestrator's deferred per-segment metric."""
+    return _eval_loss_fn(params, eval_data, ae_cfg)
+
+
 def fl_train(key, datasets, ae_cfg: ae.AEConfig, cfg: FLConfig,
              eval_data, stragglers: Sequence[int] = (),
              init_params=None, init_carry: Optional[FLCarry] = None,
-             start_iter: int = 0, stop_iter: Optional[int] = None) -> FLResult:
+             start_iter: int = 0, stop_iter: Optional[int] = None,
+             rules: Optional[sh.ShardingRules] = None,
+             avail_mask=None, defer_metrics: bool = False) -> FLResult:
     """Run the FL task. datasets: per-client image arrays.
 
     eval_data: (n_eval, H, W, C) held-out set for the global recon loss.
@@ -158,21 +197,38 @@ def fl_train(key, datasets, ae_cfg: ae.AEConfig, cfg: FLConfig,
     Chaining segments end-to-end reproduces the uninterrupted run exactly
     (same per-round keys, same eval schedule); datasets may change between
     segments (e.g. after a D2D re-exchange) — only parameter shapes must
-    stay fixed."""
+    stay fixed.  The passed-in carry is consumed (buffers donated to the
+    round function); use the returned ``FLResult.carry``.
+
+    ``rules`` shards the client axis over the mesh (see module docstring);
+    mesh=1 placement is bit-identical to the unsharded program.
+    ``avail_mask`` is a device-resident (N,) availability mask (truthy =
+    participates in aggregation) that overrides ``stragglers`` without a
+    host round-trip.  ``defer_metrics`` leaves ``eval_loss`` as a device
+    array so a caller looping over segments can materialise all metrics in
+    one transfer at the end of the run."""
     n = len(datasets)
-    data, sizes = stack_clients(datasets)
-    agg_mask = jnp.asarray(
-        [0.0 if i in set(stragglers) else 1.0 for i in range(n)])
+    data, sizes = stack_clients(datasets, rules)
+    if avail_mask is not None:
+        agg_mask = jnp.asarray(avail_mask, jnp.float32)
+    else:
+        agg_mask = jnp.asarray(
+            [0.0 if i in set(stragglers) else 1.0 for i in range(n)])
+    agg_mask = sh.shard_clients(agg_mask, rules)
 
     if init_carry is not None:
         client_params, global_params, mu, nu, step0 = init_carry
     else:
         if init_params is None:
             init_params = ae.init_ae(key, ae_cfg)
-        client_params = _broadcast(init_params, n)
-        global_params = init_params
-        zeros = jax.tree.map(jnp.zeros_like, client_params)
-        mu, nu = zeros, zeros
+        client_params = sh.shard_clients(_broadcast(init_params, n), rules)
+        # fresh copy: the caller's init_params must survive the first
+        # round's carry donation
+        global_params = jax.tree.map(jnp.copy, init_params)
+        # mu/nu need distinct buffers — aliased leaves cannot both be
+        # donated
+        mu = jax.tree.map(jnp.zeros_like, client_params)
+        nu = jax.tree.map(jnp.zeros_like, client_params)
         step0 = jnp.zeros((), jnp.float32)
 
     if start_iter % cfg.tau_a or (stop_iter is not None
@@ -185,16 +241,20 @@ def fl_train(key, datasets, ae_cfg: ae.AEConfig, cfg: FLConfig,
     start_round = start_iter // cfg.tau_a
     stop_round = n_rounds if stop_iter is None else \
         min(stop_iter // cfg.tau_a, n_rounds)
-    eval_iters, eval_losses = [], []
+    eval_iters, eval_vals = [], []
     keys = jax.random.split(jax.random.fold_in(key, 1), n_rounds)
     carry = FLCarry(client_params, global_params, mu, nu, step0)
     for r in range(start_round, stop_round):
         kr = jax.random.split(keys[r], cfg.tau_a)
-        carry = _round_fn(cfg, ae_cfg, carry, data, sizes, agg_mask, kr)
+        carry = _round_fn(cfg, ae_cfg, carry, data, sizes, agg_mask, kr,
+                          rules)
         it = (r + 1) * cfg.tau_a
         if it % cfg.eval_every == 0 or r == n_rounds - 1:
             eval_iters.append(it)
-            eval_losses.append(float(_eval_loss_fn(
-                carry.global_params, eval_data, ae_cfg)))
+            eval_vals.append(_eval_loss_fn(
+                carry.global_params, eval_data, ae_cfg))
+    eval_loss = jnp.stack(eval_vals) if eval_vals else jnp.zeros((0,))
+    if not defer_metrics:
+        eval_loss = np.asarray(eval_loss)
     return FLResult(carry.global_params, np.asarray(eval_iters),
-                    np.asarray(eval_losses), carry.client_params, carry)
+                    eval_loss, carry.client_params, carry)

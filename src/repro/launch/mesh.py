@@ -21,3 +21,16 @@ def make_host_mesh(model: int = 1):
     """Tiny mesh over however many (CPU) devices exist — smoke tests."""
     n = len(jax.devices())
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_client_mesh(data: int | None = None):
+    """1-D data-parallel mesh for the federation path.
+
+    The client-stacked data plane (exchange gate, AE pretrain, FL rounds)
+    shards only its leading CLIENTS axis, so a pure ("data",) mesh is the
+    natural layout; ``data`` defaults to every visible device (on CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` before import to
+    get K virtual devices).
+    """
+    d = len(jax.devices()) if data is None else data
+    return jax.make_mesh((d,), ("data",))

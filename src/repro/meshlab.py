@@ -1,0 +1,208 @@
+"""Mesh lab: a deterministic client world + the three client-stacked hot
+paths (AE pretraining, exchange-gate scoring, FL rounds) runnable with or
+without :class:`~repro.sharding.ShardingRules`.
+
+Shared by ``benchmarks/shard_scaling.py`` and the multi-device parity tests
+(``tests/test_mesh_parity.py``): both spawn children under
+``XLA_FLAGS=--xla_force_host_platform_device_count=K`` — the device count is
+baked into the process at backend init, so sweeping mesh sizes means one
+process per size — and compare outputs / wall time across mesh sizes.
+
+All randomness flows from ``jax.random`` (counter-based), so the same
+``LabConfig`` builds bit-identical worlds in every child regardless of its
+device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as sh
+from repro.core import channel as ch
+from repro.core import exchange as ex
+from repro.core import trust as tr
+from repro.core.qlearning import uniform_graph
+from repro.fl.trainer import FLConfig, fl_train
+from repro.models.autoencoder import AEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LabConfig:
+    n_clients: int = 8
+    n_per_client: int = 40
+    n_clusters: int = 3
+    reserve: int = 8
+    hw: int = 16                   # image height == width
+    widths: tuple = (4, 8)
+    latent: int = 8
+    tau_a: int = 5
+    n_rounds: int = 2
+    batch_size: int = 16
+    seed: int = 0
+
+    @property
+    def ae_cfg(self) -> AEConfig:
+        return AEConfig(self.hw, self.hw, 1, widths=self.widths,
+                        latent_dim=self.latent)
+
+
+def make_rules(mesh_size: int | None) -> sh.ShardingRules | None:
+    """ShardingRules over a (data=mesh_size,) mesh; ``None`` -> unsharded."""
+    if mesh_size is None:
+        return None
+    mesh = jax.make_mesh((mesh_size,), ("data",))
+    return sh.ShardingRules.default(mesh)
+
+
+def build_world(cfg: LabConfig) -> dict:
+    """Datasets, cluster assignments, trust, graph and channel for N
+    clients — everything the exchange gate and the FL trainer consume."""
+    key = jax.random.PRNGKey(cfg.seed)
+    k_data, k_assign, k_tr, k_ch, k_g, k_ex, k_fl = jax.random.split(key, 7)
+    n = cfg.n_clients
+    datasets = [
+        jax.random.uniform(jax.random.fold_in(k_data, i),
+                           (cfg.n_per_client, cfg.hw, cfg.hw, 1))
+        for i in range(n)]
+    assignments = [
+        jax.random.randint(jax.random.fold_in(k_assign, i),
+                           (cfg.n_per_client,), 0, cfg.n_clusters)
+        for i in range(n)]
+    trust = tr.make_trust(k_tr, n, cfg.n_clusters, 0.9)
+    rss = ch.make_rss(k_ch, n)
+    p_fail = ch.failure_prob(rss)
+    in_edge = uniform_graph(k_g, n)
+    eval_data = jax.random.uniform(jax.random.fold_in(k_data, n),
+                                   (32, cfg.hw, cfg.hw, 1))
+    return {"cfg": cfg, "datasets": datasets, "assignments": assignments,
+            "trust": trust, "p_fail": p_fail, "in_edge": in_edge,
+            "eval_data": eval_data, "k_ex": k_ex, "k_fl": k_fl}
+
+
+# ---------------------------------------------------------------------------
+# the three hot paths
+# ---------------------------------------------------------------------------
+
+def run_pretrain(world, rules):
+    """Vmapped one-step AE pretraining over the (sharded) client stack."""
+    cfg: LabConfig = world["cfg"]
+    return ex.pretrain_autoencoders_batched(
+        world["k_ex"], world["datasets"], cfg.ae_cfg,
+        ex.ExchangeConfig(reserve_per_cluster=cfg.reserve), rules)
+
+
+def gate_operands(world, rules):
+    """Assemble the gate engine's device operands once (host-side work)."""
+    cfg: LabConfig = world["cfg"]
+    n = cfg.n_clients
+    _k_pre, k_sel, k_ch = jax.random.split(world["k_ex"], 3)
+    sel = ex._select_reserves(k_sel, world["assignments"],
+                              [t.shape[1] for t in world["trust"]],
+                              cfg.reserve)
+    fail_u = np.asarray(jax.random.uniform(k_ch, (n,)), np.float32)
+    data_np = [np.asarray(d) for d in world["datasets"]]
+    trust_np = [np.asarray(t) for t in world["trust"]]
+    return ex._assemble_gate_inputs(
+        data_np, trust_np, world["in_edge"], sel, fail_u,
+        world["p_fail"], cfg.reserve, rules)
+
+
+def run_gate(world, params, operands, rules):
+    """One jitted gate-scoring call: (base, scores, fail, accept)."""
+    cfg: LabConfig = world["cfg"]
+    return ex._gate_scores(params, *operands, cfg.ae_cfg, False, rules)
+
+
+def run_fl_segment(world, rules):
+    """A short FL segment (``n_rounds`` aggregation rounds) from scratch."""
+    cfg: LabConfig = world["cfg"]
+    flcfg = FLConfig(total_iters=cfg.tau_a * cfg.n_rounds, tau_a=cfg.tau_a,
+                     eval_every=cfg.tau_a * cfg.n_rounds,
+                     batch_size=cfg.batch_size)
+    res = fl_train(world["k_fl"], world["datasets"], cfg.ae_cfg, flcfg,
+                   world["eval_data"], rules=rules)
+    return res.global_params, res.client_params
+
+
+# ---------------------------------------------------------------------------
+# parity + timing harness (runs inside one child process)
+# ---------------------------------------------------------------------------
+
+def digest(tree) -> str:
+    """sha256 over the concatenated little-endian bytes of all leaves."""
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(tree):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()
+
+
+def max_abs_diff(a, b) -> float:
+    return max(float(jnp.max(jnp.abs(jnp.asarray(x) - jnp.asarray(y))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def parity_report(cfg: LabConfig, mesh_size: int) -> dict:
+    """Run all three paths unsharded, at mesh=1, and at ``mesh_size``;
+    report bit-parity (digests) and max param deltas."""
+    world = build_world(cfg)
+    out = {"device_count": len(jax.devices()), "mesh_size": mesh_size}
+
+    ref = {}
+    for tag, rules in (("base", None), ("mesh1", make_rules(1)),
+                       (f"mesh{mesh_size}", make_rules(mesh_size))):
+        params = run_pretrain(world, rules)
+        operands = gate_operands(world, rules)
+        gate = run_gate(world, params, operands, rules)
+        gp, cp = run_fl_segment(world, rules)
+        out[f"pretrain_digest_{tag}"] = digest(params)
+        out[f"gate_digest_{tag}"] = digest(gate)
+        out[f"fl_digest_{tag}"] = digest((gp, cp))
+        if tag == "base":
+            ref = {"params": params, "gate": gate, "gp": gp}
+        else:
+            out[f"pretrain_maxdiff_{tag}"] = max_abs_diff(ref["params"],
+                                                          params)
+            out[f"gate_maxdiff_{tag}"] = max_abs_diff(ref["gate"][:2],
+                                                      gate[:2])
+            out[f"fl_maxdiff_{tag}"] = max_abs_diff(ref["gp"], gp)
+    return out
+
+
+def time_path(fn, *, iters: int = 5) -> float:
+    """Mean wall-clock us per call after one warmup (compile) call."""
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def timing_report(cfg: LabConfig, mesh_size: int | None,
+                  iters: int = 5) -> dict:
+    """Wall-time the gate program and one FL round at the given mesh size
+    (None -> the plain unsharded path)."""
+    world = build_world(cfg)
+    rules = make_rules(mesh_size)
+    params = run_pretrain(world, rules)
+    operands = gate_operands(world, rules)
+
+    gate_us = time_path(
+        lambda: run_gate(world, params, operands, rules), iters=iters)
+
+    # FL: time a full fl_train segment (stacking + n_rounds donated rounds)
+    fl_us = time_path(lambda: run_fl_segment(world, rules)[0],
+                      iters=max(iters // 2, 2))
+
+    return {"device_count": len(jax.devices()),
+            "mesh_size": 0 if mesh_size is None else mesh_size,
+            "n_clients": cfg.n_clients,
+            "gate_us": gate_us, "fl_segment_us": fl_us,
+            "gate_us_per_client": gate_us / cfg.n_clients,
+            "fl_us_per_client": fl_us / cfg.n_clients}

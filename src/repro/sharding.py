@@ -47,6 +47,15 @@ class ShardingRules:
     mesh: Mesh
     rules: Mapping[str, Any]
 
+    def __hash__(self):
+        # The frozen-dataclass default would hash the rules dict and fail;
+        # an explicit hash lets a ShardingRules ride through jit as a static
+        # argument (the client-stacked hot paths specialise on it).
+        def _t(v):
+            return tuple(v) if isinstance(v, (list, tuple)) else v
+        return hash((self.mesh,
+                     tuple(sorted((k, _t(v)) for k, v in self.rules.items()))))
+
     @classmethod
     def default(cls, mesh: Mesh) -> "ShardingRules":
         """The framework's standard layout.
@@ -137,3 +146,39 @@ def constrain(x, rules: ShardingRules, logical: Sequence[str | None]):
         return jax.lax.with_sharding_constraint(x, rules.named(logical, x.shape))
     except (ValueError, RuntimeError):
         return x
+
+
+# ---------------------------------------------------------------------------
+# Client-axis helpers: the federation data plane stacks every per-client
+# quantity (data, masks, AE params, optimiser moments) with a leading CLIENTS
+# axis; these map/constrain whole pytrees of such tensors in one call.
+# ---------------------------------------------------------------------------
+
+def client_axes(ndim: int) -> tuple:
+    """Logical axes for a tensor whose leading dim is the client stack."""
+    if ndim == 0:
+        return ()
+    return (CLIENTS,) + (None,) * (ndim - 1)
+
+
+def shard_clients(tree, rules: ShardingRules | None):
+    """device_put a pytree of leading-client-axis tensors onto the mesh.
+
+    Every leaf's first dimension is placed per ``rules`` (CLIENTS -> the
+    data-parallel mesh product, replicated when N does not divide it);
+    remaining dims stay replicated.  ``rules=None`` is the identity, so
+    single-device callers pay nothing.
+    """
+    if rules is None:
+        return tree
+    return jax.tree.map(
+        lambda x: jax.device_put(x, rules.named(client_axes(x.ndim), x.shape)),
+        tree)
+
+
+def constrain_clients(tree, rules: ShardingRules | None):
+    """In-jit sharding constraint pinning each leaf's leading client axis."""
+    if rules is None:
+        return tree
+    return jax.tree.map(
+        lambda x: constrain(x, rules, client_axes(x.ndim)), tree)

@@ -1,0 +1,28 @@
+"""Child process for ``test_mesh_parity``: prints a meshlab parity report.
+
+Must be launched with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+in the environment — the CPU device count is fixed at backend init, so the
+parent pytest process (which runs on the real device count) cannot run the
+multi-device programs itself.  Output: one ``MESH_PARITY {json}`` line.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+TAG = "MESH_PARITY "
+
+
+def main() -> None:
+    import jax
+
+    from repro import meshlab as ML
+
+    mesh = min(4, len(jax.devices()))
+    rep = ML.parity_report(ML.LabConfig(), mesh)
+    print(TAG + json.dumps(rep), flush=True)
+
+
+if __name__ == "__main__":
+    main()

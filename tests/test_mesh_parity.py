@@ -1,0 +1,69 @@
+"""Sharded vs single-device parity of the client-stacked data plane.
+
+A child process runs under ``--xla_force_host_platform_device_count=4`` (the
+parent's device count is already frozen) and reports digests/deltas for the
+exchange gate, AE pretraining and one FL segment at mesh sizes 1 and 4
+against the plain unsharded program (``repro.meshlab.parity_report``).
+
+Contract:
+  * mesh=1 placement is **bit-identical** to the single-device path for all
+    three programs (the acceptance bar for enabling sharding by default);
+  * at mesh=4 the gate and pretraining stay bit-identical — per-client work
+    has no cross-client reduction, so shards compute the same bits;
+  * the FL round's FedAvg mean is a cross-shard all-reduce whose float sums
+    reassociate — parity there is a ~1e-7 param delta, not bit equality.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = [pytest.mark.mesh, pytest.mark.slow]
+
+_TAG = "MESH_PARITY "
+
+
+@pytest.fixture(scope="module")
+def report():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4")
+    child = os.path.join(os.path.dirname(__file__), "mesh_parity_child.py")
+    proc = subprocess.run([sys.executable, child], env=env,
+                          capture_output=True, text=True, timeout=1500)
+    rep = None
+    for line in proc.stdout.splitlines():
+        if line.startswith(_TAG):
+            rep = json.loads(line[len(_TAG):])
+    assert rep is not None, (
+        f"mesh parity child failed (rc={proc.returncode}):\n"
+        f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+    if rep["device_count"] < 4:
+        pytest.skip("--xla_force_host_platform_device_count not honoured "
+                    f"(got {rep['device_count']} devices)")
+    return rep
+
+
+def test_mesh1_bit_identical_to_single_device(report):
+    """Sharding rules on a 1-device mesh change nothing, bit for bit."""
+    for path in ("gate", "pretrain", "fl"):
+        assert report[f"{path}_digest_mesh1"] == \
+            report[f"{path}_digest_base"], path
+
+
+def test_gate_sharded_bit_parity(report):
+    assert report["gate_digest_mesh4"] == report["gate_digest_base"]
+    assert report["gate_maxdiff_mesh4"] == 0.0
+
+
+def test_pretrain_sharded_bit_parity(report):
+    assert report["pretrain_digest_mesh4"] == report["pretrain_digest_base"]
+    assert report["pretrain_maxdiff_mesh4"] == 0.0
+
+
+def test_fl_segment_sharded_parity(report):
+    """The all-reduced FedAvg mean reassociates float sums across shards;
+    anything beyond ~1e-5 would be a real partitioning bug."""
+    assert report["fl_maxdiff_mesh4"] < 1e-5

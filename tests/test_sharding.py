@@ -67,6 +67,37 @@ def test_batch_spec(mesh):
     assert rules.spec((sh.BATCH, None)) == P(("data",), None)
 
 
+def test_clients_axis_non_divisible_replicates():
+    """A client count that does not divide the data axis degrades to
+    replication instead of failing at lower time (graceful N)."""
+    amesh = _abstract_mesh((4,), ("data",))
+    rules = sh.ShardingRules.default(amesh)
+    assert rules.spec((sh.CLIENTS, None), dims=(6, 7)) == P(None, None)
+    assert rules.spec((sh.CLIENTS, None), dims=(8, 7)) == P(("data",), None)
+
+
+def test_sharding_rules_hashable_for_jit_static():
+    """ShardingRules rides through jit as a static argument — it must hash
+    (the default frozen-dataclass hash would choke on the rules dict)."""
+    amesh = _abstract_mesh((4,), ("data",))
+    rules = sh.ShardingRules.default(amesh)
+    assert hash(rules) == hash(sh.ShardingRules.default(amesh))
+    assert rules == sh.ShardingRules.default(amesh)
+    assert len({rules, sh.ShardingRules.default(amesh)}) == 1
+
+
+def test_client_axes_helpers(mesh):
+    rules = sh.ShardingRules.default(mesh)
+    assert sh.client_axes(3) == (sh.CLIENTS, None, None)
+    assert sh.client_axes(0) == ()
+    # rules=None is the identity for both helpers
+    x = np.ones((4, 3))
+    assert sh.shard_clients(x, None) is x
+    assert sh.constrain_clients(x, None) is x
+    y = sh.shard_clients(jax.numpy.ones((4, 3)), rules)
+    assert y.shape == (4, 3)
+
+
 def test_multi_pod_rules():
     devs = np.array(jax.devices())
     if devs.size < 1:
