@@ -8,7 +8,6 @@
    the channel (sum of lam(i,a_i)*(1-P_D(i,a_i)))."""
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -16,11 +15,8 @@ import numpy as np
 
 from benchmarks import common as C
 from repro.core import channel as ch
-from repro.core import dissimilarity as ds
 from repro.core import qlearning as ql
 from repro.core import rewards as rw
-from repro.core import trust as tr
-from repro.core.pipeline import PipelineConfig
 
 
 def _world(key, n=12):

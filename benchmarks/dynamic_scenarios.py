@@ -38,7 +38,8 @@ def _orch_cfg(bc: C.BenchConfig, mode: str, quick: bool) -> OrchestratorConfig:
 
 
 def run(bc: C.BenchConfig | None = None, dataset: str = "fmnist",
-        scenarios=SCENARIOS, quick: bool = True):
+        scenarios=SCENARIOS, quick: bool = True, modes=MODES,
+        save_as: str | None = None):
     bc = bc or C.BenchConfig()
     key, xs, ys, ev, ae_cfg = C.make_world(bc, dataset)
     # Warm the jit caches (pipeline, AE pretrain, gate, FL round) with one
@@ -50,7 +51,7 @@ def run(bc: C.BenchConfig | None = None, dataset: str = "fmnist",
     run_orchestrator(key, xs, ys, ae_cfg, warm, "static", ev.images)
     out = {}
     for scenario in scenarios:
-        for mode in MODES:
+        for mode in modes:
             cfg = _orch_cfg(bc, mode, quick)
             with C.Timer() as t:
                 res = run_orchestrator(key, xs, ys, ae_cfg, cfg, scenario,
@@ -62,8 +63,30 @@ def run(bc: C.BenchConfig | None = None, dataset: str = "fmnist",
                   f"churn={s['mean_link_churn']:.2f} "
                   f"delivery={s['mean_expected_delivery']:.3f} "
                   f"moved={s['total_moved']}", flush=True)
-    C.save_json(f"dynamic_scenarios_{dataset}", out)
+    C.save_json(save_as or f"dynamic_scenarios_{dataset}", out)
     return out
+
+
+def smoke(quick=True):
+    """CI bench-smoke subset: ONE tiny fading/online row.
+
+    A single orchestrated scenario (env evolution + a warm-started
+    re-discovery burst + re-exchange + segmented FL; unsharded — the mesh
+    CI job owns sharded coverage) is enough to put a perf-trajectory point
+    in every PR's artifact without the full scenarios x modes sweep."""
+    bc = C.BenchConfig(n_clients=6, n_per_class=40, fl_iters=30, tau_a=10,
+                       eval_every=30, rl_episodes=80, rl_buffer=20)
+    # save under its own name: the full suite's tracked artifact must not
+    # be clobbered by a smoke subset
+    out = run(bc, scenarios=("fading",), modes=("online",), quick=True,
+              save_as="dynamic_smoke")
+    s = out["fading/online"]
+    print(f"dynamic_smoke_fading_online,{s['elapsed_us']:.0f},"
+          f"final_loss={s['final_loss']:.5f};"
+          f"link_churn={s['mean_link_churn']:.3f};"
+          f"expected_delivery={s['mean_expected_delivery']:.3f};"
+          f"moved={s['total_moved']};"
+          f"rediscoveries={s['n_rediscoveries']}")
 
 
 def main(quick=True):

@@ -43,7 +43,9 @@ def main(quick=True):
     derived = (f"max_stragglers={worst};"
                + ";".join(f"loss_{m}={fl[f'{worst}/{m}']:.5f}"
                           for m in METHODS)
-               + f";smart_best={fl[f'{worst}/smart'] <= min(fl[f'{worst}/uniform'], fl[f'{worst}/noniid'])}")
+               + ";smart_best="
+               + str(fl[f"{worst}/smart"]
+                     <= min(fl[f"{worst}/uniform"], fl[f"{worst}/noniid"])))
     print(f"fig6_stragglers,{t.elapsed*1e6:.0f},{derived}")
 
 

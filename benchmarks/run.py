@@ -34,6 +34,7 @@ BENCHES = {
     "dryrun": dryrun_table.main,
     "beyond": beyond_paper.main,
     "dynamic": dynamic_scenarios.main,
+    "dynamic-smoke": dynamic_scenarios.smoke,   # CI: one tiny online row
     "shard": shard_scaling.main,
 }
 
@@ -68,12 +69,20 @@ class _RowTee(io.TextIOBase):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--only", default=None, metavar="NAME[,NAME...]",
+                    help="comma-separated subset of: " + ",".join(BENCHES))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the emitted rows to a BENCH_*.json "
                          "artifact at PATH")
     args = ap.parse_args()
-    names = [args.only] if args.only else list(BENCHES)
+    if args.only:
+        names = args.only.split(",")
+        unknown = [n for n in names if n not in BENCHES]
+        if unknown:
+            ap.error(f"unknown bench(es) {unknown}; choose from "
+                     + ",".join(BENCHES))
+    else:
+        names = [n for n in BENCHES if n != "dynamic-smoke"]  # CI-only row
 
     tee = _RowTee(sys.stdout) if args.json else None
     if tee is not None:

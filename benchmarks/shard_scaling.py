@@ -12,12 +12,17 @@ Rows (per mesh size, own wall time per row):
 
     shard_gate_mesh{m}_n{N},<us>,mesh=..;clients=..;us_per_client=..;...
     shard_fl_mesh{m}_n{N},<us>,...
+    shard_disc_mesh{m}_n{N},<us>,...
 
 Derived fields carry the per-client cost ratio vs the mesh=1 row (weak
 scaling: ~1.0 is flat) and the parity verdict — gate/pretrain are expected
 *bit-identical* under sharding (per-client scoring has no cross-client
-reduction); the FL round's FedAvg all-reduce reassociates float sums, so
-its verdict reports the max param delta instead (~1e-7).
+reduction); the FL round's FedAvg all-reduce and the discovery burst's two
+reward collectives reassociate float sums, so their verdicts report max
+float deltas instead (~1e-7), plus final-graph agreement for discovery.
+The discovery row normalises by agent*episode (each episode is one scan
+step of Algorithm 1), so ``per_agent_ep_vs_mesh1`` ~ 1.0 means flat weak
+scaling of the re-discovery bursts.
 """
 from __future__ import annotations
 
@@ -55,8 +60,10 @@ def child_main(mesh: int, n_clients: int, quick: bool, iters: int) -> None:
                                == par["pretrain_digest_base"])
     rep["mesh1_bitwise"] = all(
         par[f"{p}_digest_mesh1"] == par[f"{p}_digest_base"]
-        for p in ("gate", "pretrain", "fl"))
+        for p in ("gate", "pretrain", "fl", "disc", "disc_ucb", "disc_warm"))
     rep["fl_maxdiff"] = par[f"fl_maxdiff_{tag}"]
+    rep["disc_q_maxdiff"] = par[f"disc_q_maxdiff_{tag}"]
+    rep["disc_edge_agree"] = par[f"disc_edge_agree_{tag}"]
     print(_TAG + json.dumps(rep), flush=True)
 
 
@@ -95,10 +102,18 @@ def main(quick: bool = True) -> None:
               f"per_client_vs_mesh1={gate_ratio:.2f};"
               f"sharded_bitwise={r['gate_bitwise']};"
               f"pretrain_bitwise={r['pretrain_bitwise']}")
+        disc_ratio = (r["disc_us_per_agent_episode"]
+                      / ref["disc_us_per_agent_episode"])
         print(f"shard_fl_mesh{m}_n{n},{r['fl_segment_us']:.0f},{common};"
               f"us_per_client={r['fl_us_per_client']:.1f};"
               f"per_client_vs_mesh1={fl_ratio:.2f};"
               f"fl_maxdiff_vs_single={r['fl_maxdiff']:.2e}")
+        print(f"shard_disc_mesh{m}_n{n},{r['disc_us']:.0f},{common};"
+              f"episodes={r['rl_episodes']};"
+              f"us_per_agent_ep={r['disc_us_per_agent_episode']:.2f};"
+              f"per_agent_ep_vs_mesh1={disc_ratio:.2f};"
+              f"disc_q_maxdiff_vs_single={r['disc_q_maxdiff']:.2e};"
+              f"disc_edge_agree={r['disc_edge_agree']}/{n}")
 
 
 if __name__ == "__main__":

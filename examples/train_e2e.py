@@ -11,7 +11,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import optim
 from repro.checkpoint import save_pytree

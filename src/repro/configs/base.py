@@ -7,7 +7,7 @@ variant used by CPU smoke tests: <=2 layers, d_model<=512, <=4 experts).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -8,7 +8,7 @@ Returns everything the benchmarks need (heatmaps, link stats, new datasets).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Sequence
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -101,8 +101,10 @@ def run_pipeline(key, datasets, labels, ae_cfg: AEConfig,
     orchestrator owns the channel state); omitted, one is drawn from the
     pipeline key exactly as before.
 
-    ``rules`` (:class:`repro.sharding.ShardingRules`) shards the exchange
-    engine's client axis over the mesh — see ``core/exchange.py``."""
+    ``rules`` (:class:`repro.sharding.ShardingRules`) shards the client
+    axis over the mesh for both device planes: the RL discovery loop's
+    agent-major Q-tables/buffers (``core/qlearning.py``) and the exchange
+    engine's stacked gate scoring (``core/exchange.py``)."""
     k_cl, k_tr, k_ch, k_rl, k_ex = split_pipeline_keys(key)
     n = len(datasets)
 
@@ -118,7 +120,7 @@ def run_pipeline(key, datasets, labels, ae_cfg: AEConfig,
     local_r = rw.local_reward_matrix(lam_before, p_fail, cfg.reward)
 
     if in_edge is None:
-        graph = ql.discover_graph(k_rl, local_r, p_fail, cfg.rl)
+        graph = ql.discover_graph(k_rl, local_r, p_fail, cfg.rl, rules=rules)
         in_edge = graph.in_edge
     else:
         in_edge = jnp.asarray(in_edge)

@@ -7,6 +7,16 @@ vectorised — decentralisation is preserved semantically (each agent reads
 only its own Q row; the only shared quantities are the episode-mean reward
 and r_net, which the paper explicitly lets devices exchange).
 
+Sharding: pass ``rules`` (:class:`repro.sharding.ShardingRules`) and every
+agent-major array — the Q-tables, pick counts and replay buffers in
+:class:`RLState`, plus the ``local_r``/``p_fail`` reward matrices — is
+placed on the CLIENTS mesh axis.  The decentralised structure is exactly
+the sharded structure: action selection, buffer writes and the Eq. 6 update
+are row-wise (shard-local), and the two genuinely shared scalars (the
+Eq. 3 episode-mean reward and Eq. 5 r_net) lower to psum-style collectives
+(``sharding.client_mean``).  ``rules=None`` is bit-identical to the
+pre-sharding program, and a 1-device mesh is bit-identical to ``None``.
+
 Deviation note: Eq. 4 normalises raw Q values, which is ill-defined once
 rewards (hence Q) can be negative (r_ij = a1*lam - a2*P_D can be < 0).  We
 use a shifted normalisation Q~ = Q - min(Q) + eps per row, which equals the
@@ -20,6 +30,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import sharding as sh
 from repro.core import rewards as rw
 
 
@@ -63,31 +74,41 @@ def _gamma(t, cfg: RLConfig):
                        cfg.gamma_max)
 
 
+def _row_lookup(mat, actions):
+    """mat[i, actions[i]] for every agent i — an axis-1 gather whose rows
+    stay on their shard (unlike a fancy-index gather, which the partitioner
+    may lower to a cross-shard collective-permute)."""
+    return jnp.take_along_axis(mat, actions[:, None], axis=1)[:, 0]
+
+
+def _mask_self(mat, fill):
+    """Self-links masked via a broadcast `where` (row-local; the scatter
+    form `at[diag].set` partitions poorly over a sharded agent axis)."""
+    n = mat.shape[-1]
+    eye = jnp.eye(n, dtype=bool)
+    return jnp.where(eye, fill, mat)
+
+
 def policy_probs(q, gamma, u):
     """Eq. 4 with shifted normalisation; self-links masked.
 
     q: (N, N), u: (N, N) uniform noise."""
-    n = q.shape[0]
-    eye = jnp.eye(n, dtype=bool)
-    qs = jnp.where(eye, jnp.inf, q)
+    qs = _mask_self(q, jnp.inf)
     qmin = jnp.min(qs, axis=1, keepdims=True)
-    q_shift = jnp.where(eye, 0.0, q - qmin + 1e-6)
+    q_shift = _mask_self(q - qmin + 1e-6, 0.0)
     q_norm = q_shift / jnp.sum(q_shift, axis=1, keepdims=True)
-    mixed = gamma * q_norm + (1.0 - gamma) * u
-    mixed = jnp.where(eye, 0.0, mixed)
+    mixed = _mask_self(gamma * q_norm + (1.0 - gamma) * u, 0.0)
     return mixed / jnp.sum(mixed, axis=1, keepdims=True)
 
 
 def ucb_actions(q, counts, episode, c):
     """UCB1 over incoming edges (beyond-paper variant): value estimate is
     the running mean reward per action; unexplored actions are infinite."""
-    n = q.shape[0]
-    eye = jnp.eye(n, dtype=bool)
     mean = q / jnp.maximum(counts, 1.0)
     bonus = c * jnp.sqrt(jnp.log(episode.astype(jnp.float32) + 2.0)
                          / jnp.maximum(counts, 1e-9))
     score = jnp.where(counts > 0, mean + bonus, jnp.inf)
-    score = jnp.where(eye, -jnp.inf, score)
+    score = _mask_self(score, -jnp.inf)
     return jnp.argmax(score, axis=1)
 
 
@@ -117,7 +138,8 @@ def init_rl_state(n: int, cfg: RLConfig = RLConfig()) -> RLState:
 
 def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig(),
                    init_state: Optional[RLState] = None,
-                   n_episodes: Optional[int] = None) -> GraphResult:
+                   n_episodes: Optional[int] = None,
+                   rules: Optional[sh.ShardingRules] = None) -> GraphResult:
     """Run Algorithm 1.
 
     local_r: (N, N) precomputed r_ij (Eq. 2; stationary in the paper's
@@ -130,27 +152,41 @@ def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig(),
     of re-exploring from scratch.  ``n_episodes`` overrides
     ``cfg.n_episodes`` for such bursts; the whole burst stays one
     device-resident ``lax.scan``.
+
+    ``rules`` shards the agent axis over the mesh (see module docstring);
+    a warm-start state from a sharded run is already correctly placed and
+    rides straight back in (re-placement is a no-op ``device_put``).
     """
     n = local_r.shape[0]
     m = cfg.buffer_size
     n_ep = cfg.n_episodes if n_episodes is None else n_episodes
     state = init_state if init_state is not None else init_rl_state(n, cfg)
+    # Place every agent-major operand on the CLIENTS mesh axis (scalars in
+    # the state — r_net_prev, t — map to replicated).  rules=None: identity.
+    local_r, p_fail, state = sh.shard_clients(
+        (jnp.asarray(local_r), jnp.asarray(p_fail), state), rules)
     use_ucb = cfg.policy == "ucb"
 
     def episode(state: RLState, inp):
         e, key = inp
+        state = sh.constrain_clients(state, rules)
         ku, ks = jax.random.split(key)
         gamma = _gamma(state.t, cfg)
         if use_ucb:
             actions = ucb_actions(state.q, state.counts, e, cfg.ucb_c)
         else:
-            u = jax.random.uniform(ku, (n, n))
+            u = sh.constrain_clients(jax.random.uniform(ku, (n, n)), rules)
             probs = policy_probs(state.q, gamma, u)
             actions = jax.random.categorical(ks, jnp.log(probs + 1e-12),
                                              axis=1)
-        r_loc = local_r[jnp.arange(n), actions]                  # (N,)
-        r_glob = rw.global_rewards(r_loc, gamma, state.r_net_prev)
-        counts = state.counts.at[jnp.arange(n), actions].add(1.0)
+        actions = sh.constrain_clients(actions, rules)
+        r_loc = _row_lookup(local_r, actions)                    # (N,)
+        # Eq. 3's episode-mean reward: the first of the two cross-agent
+        # scalars — a psum-style all-reduce on a mesh.
+        mean_r = sh.client_mean(r_loc, rules)
+        r_glob = rw.global_rewards(r_loc, gamma, state.r_net_prev, mean_r)
+        hot = jax.nn.one_hot(actions, n, dtype=state.counts.dtype)
+        counts = state.counts + hot
         slot = e % m
         buf_a = state.buf_actions.at[:, slot].set(actions)
         buf_r = state.buf_rewards.at[:, slot].set(r_glob)
@@ -158,12 +194,15 @@ def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig(),
 
         if use_ucb:
             # UCB maintains running reward sums directly (no buffer flush)
-            q = state.q.at[jnp.arange(n), actions].add(r_glob)
+            q = state.q + hot * r_glob[:, None]
             state = RLState(q, counts, buf_a, buf_r, buf_l,
                             state.r_net_prev, state.t)
         else:
             def flush(_):
-                r_net = rw.network_performance(buf_a, buf_l, n)
+                # Eq. 5: per-agent r_hat is shard-local, the network mean
+                # is the second collective.
+                r_hat = rw.frequent_local_reward(buf_a, buf_l, n)
+                r_net = sh.client_mean(r_hat, rules)
                 q = _q_update(state.q, buf_a, buf_r)
                 return RLState(q, counts, buf_a, buf_r, buf_l, r_net,
                                state.t + 1)
@@ -173,8 +212,8 @@ def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig(),
                                state.r_net_prev, state.t)
 
             state = jax.lax.cond(slot == m - 1, flush, keep, None)
-        diag = (jnp.mean(r_loc), jnp.mean(p_fail[jnp.arange(n), actions]))
-        return state, diag
+        diag = (mean_r, sh.client_mean(_row_lookup(p_fail, actions), rules))
+        return sh.constrain_clients(state, rules), diag
 
     keys = jax.random.split(key, n_ep)
     state, (ep_r, ep_p) = jax.lax.scan(
@@ -188,7 +227,7 @@ def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig(),
         qf = jnp.where(state.counts == 0, -jnp.inf, qf)
     else:
         qf = state.q
-    qf = qf.at[jnp.arange(n), jnp.arange(n)].set(-jnp.inf)
+    qf = _mask_self(qf, -jnp.inf)
     in_edge = jnp.argmax(qf, axis=1)
     return GraphResult(in_edge, state.q, ep_r, ep_p, state)
 

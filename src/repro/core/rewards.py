@@ -32,25 +32,38 @@ def local_reward_matrix(lam, p_fail, cfg: RewardConfig = RewardConfig()):
     return r.at[jnp.arange(n), jnp.arange(n)].set(-1e9)
 
 
-def global_rewards(local_r, gamma, r_net_prev):
+def global_rewards(local_r, gamma, r_net_prev, mean_r=None):
     """Eq. 3, vectorised over agents.
 
     local_r: (N,) this episode's local rewards r_{i, j_i}.
-    Returns (N,) R^e_{ij}."""
-    mean_r = jnp.mean(local_r)
+    Returns (N,) R^e_{ij}.
+
+    ``mean_r`` optionally supplies the episode-mean reward — the sharded
+    discovery plane computes it as an explicit cross-shard collective
+    (``sharding.client_mean``) instead of a full-vector reduction here."""
+    if mean_r is None:
+        mean_r = jnp.mean(local_r)
     return local_r + gamma * (mean_r - r_net_prev)
 
 
-def network_performance(buf_actions, buf_rewards_local, n_actions: int):
-    """Eq. 5: r_net^t = mean_k r_hat_k^f, where r_hat_k^f is the *local*
-    reward of agent k's most frequent buffered action.
+def frequent_local_reward(buf_actions, buf_rewards_local, n_actions: int):
+    """Per-agent r_hat_k^f (Eq. 5's inner term): the mean *local* reward of
+    agent k's most frequent buffered action.  Every op is row-wise over the
+    agent axis, so a CLIENTS-sharded buffer stays shard-local.
 
     buf_actions: (N, M) int32; buf_rewards_local: (N, M) local rewards at
-    the time each action was taken."""
+    the time each action was taken.  Returns (N,)."""
     onehot = jax.nn.one_hot(buf_actions, n_actions, dtype=jnp.float32)  # (N,M,A)
     counts = jnp.sum(onehot, axis=1)                                    # (N,A)
     freq_action = jnp.argmax(counts, axis=-1)                           # (N,)
     match = buf_actions == freq_action[:, None]                         # (N,M)
     sums = jnp.sum(buf_rewards_local * match, axis=1)
     cnt = jnp.maximum(jnp.sum(match, axis=1), 1)
-    return jnp.mean(sums / cnt)
+    return sums / cnt
+
+
+def network_performance(buf_actions, buf_rewards_local, n_actions: int):
+    """Eq. 5: r_net^t = mean_k r_hat_k^f — the network-wide scalar the
+    paper lets devices exchange (a psum-style mean on a mesh)."""
+    return jnp.mean(
+        frequent_local_reward(buf_actions, buf_rewards_local, n_actions))

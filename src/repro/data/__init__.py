@@ -1,2 +1,3 @@
-from repro.data.synthetic import cifar_like, fmnist_like, make_image_dataset  # noqa: F401
+from repro.data.synthetic import (cifar_like, fmnist_like,  # noqa: F401
+                                  make_image_dataset)
 from repro.data.partition import partition_by_classes  # noqa: F401

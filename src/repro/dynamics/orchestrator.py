@@ -29,7 +29,8 @@ availability masks stay on device across segments; per-segment metrics
 device scalars and materialised in a single transfer after the last segment
 — the only host round-trips inside the loop are the exchange's inherently
 ragged reserve assembly on re-discovery segments.  Pass ``rules`` to shard
-every client-stacked tensor (FL carry, exchange stacks) over the mesh.
+every client-stacked tensor (FL carry, exchange stacks, and the RL bursts'
+agent-major Q-tables/buffers) over the mesh.
 
 Determinism contract (tested in ``tests/test_dynamics_parity.py``): under
 the ``static`` scenario with mode ``"oneshot"``, the run is bit-for-bit
@@ -94,9 +95,14 @@ class OrchestratorResult(NamedTuple):
 
 
 def _rediscover(key, data, trust, p_fail, cfg: OrchestratorConfig,
-                rl_state: Optional[ql.RLState]):
+                rl_state: Optional[ql.RLState], rules=None):
     """Re-cluster the *current* datasets and run a warm-started RL burst
-    (or a uniform re-draw).  Returns (in_edge, rl_state, assigns)."""
+    (or a uniform re-draw).  Returns (in_edge, rl_state, assigns).
+
+    ``rules`` shards the burst's agent axis; a warm-start ``rl_state`` from
+    a previous sharded burst is already mesh-placed and stays device-
+    resident across segments (re-placement inside ``discover_graph`` is a
+    no-op)."""
     k_cl, k_rl = jax.random.split(key)
     pcfg = cfg.pipeline
     _, cents, assigns = cluster_clients(k_cl, data, pcfg)
@@ -108,7 +114,7 @@ def _rediscover(key, data, trust, p_fail, cfg: OrchestratorConfig,
     local_r = rw.local_reward_matrix(lam, p_fail, pcfg.reward)
     graph = ql.discover_graph(k_rl, local_r, p_fail, pcfg.rl,
                               init_state=rl_state,
-                              n_episodes=cfg.burst_episodes)
+                              n_episodes=cfg.burst_episodes, rules=rules)
     return graph.in_edge, graph.state, assigns
 
 
@@ -179,7 +185,7 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
             if cfg.mode != "oneshot" and s % cfg.rediscover_every == 0:
                 new_edge, rl_state, assigns = _rediscover(
                     jax.random.fold_in(k_pipe, 100 + s), data,
-                    trust, p_fail, cfg, rl_state)
+                    trust, p_fail, cfg, rl_state, rules=rules)
                 if cfg.exchange_on_rediscover:
                     res = ex.run_exchange(
                         jax.random.fold_in(k_pipe, 200 + s), data, labels,

@@ -31,7 +31,7 @@ touching this module.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,2 +1,3 @@
-from repro.fl.trainer import FLCarry, FLConfig, FLResult, fl_train, stack_clients  # noqa: F401
+from repro.fl.trainer import (FLCarry, FLConfig,  # noqa: F401
+                              FLResult, fl_train, stack_clients)
 from repro.fl.linear_eval import linear_evaluation  # noqa: F401

@@ -14,7 +14,6 @@ import jax.numpy as jnp
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import build_model
-from repro.sharding import ShardingRules
 
 
 def main():

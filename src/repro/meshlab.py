@@ -1,6 +1,6 @@
-"""Mesh lab: a deterministic client world + the three client-stacked hot
-paths (AE pretraining, exchange-gate scoring, FL rounds) runnable with or
-without :class:`~repro.sharding.ShardingRules`.
+"""Mesh lab: a deterministic client world + the client-stacked hot paths
+(AE pretraining, exchange-gate scoring, FL rounds, RL graph discovery)
+runnable with or without :class:`~repro.sharding.ShardingRules`.
 
 Shared by ``benchmarks/shard_scaling.py`` and the multi-device parity tests
 (``tests/test_mesh_parity.py``): both spawn children under
@@ -25,6 +25,8 @@ import numpy as np
 from repro import sharding as sh
 from repro.core import channel as ch
 from repro.core import exchange as ex
+from repro.core import qlearning as ql
+from repro.core import rewards as rw
 from repro.core import trust as tr
 from repro.core.qlearning import uniform_graph
 from repro.fl.trainer import FLConfig, fl_train
@@ -43,6 +45,8 @@ class LabConfig:
     tau_a: int = 5
     n_rounds: int = 2
     batch_size: int = 16
+    rl_episodes: int = 120         # discovery program length (one burst)
+    rl_buffer: int = 30
     seed: int = 0
 
     @property
@@ -79,9 +83,16 @@ def build_world(cfg: LabConfig) -> dict:
     in_edge = uniform_graph(k_g, n)
     eval_data = jax.random.uniform(jax.random.fold_in(k_data, n),
                                    (32, cfg.hw, cfg.hw, 1))
+    # Discovery-plane operands (keys folded, not split, so the draws above
+    # stay identical to pre-discovery lab worlds): a synthetic dissimilarity
+    # matrix through the real Eq. 2 reward map.
+    lam = jax.random.uniform(jax.random.fold_in(key, 100), (n, n))
+    local_r = rw.local_reward_matrix(lam, p_fail)
     return {"cfg": cfg, "datasets": datasets, "assignments": assignments,
             "trust": trust, "p_fail": p_fail, "in_edge": in_edge,
-            "eval_data": eval_data, "k_ex": k_ex, "k_fl": k_fl}
+            "eval_data": eval_data, "local_r": local_r,
+            "k_ex": k_ex, "k_fl": k_fl,
+            "k_rl": jax.random.fold_in(key, 101)}
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +140,36 @@ def run_fl_segment(world, rules):
     return res.global_params, res.client_params
 
 
+def _rl_cfg(cfg: LabConfig, policy: str, episodes=None) -> ql.RLConfig:
+    return ql.RLConfig(n_episodes=cfg.rl_episodes if episodes is None
+                       else episodes,
+                       buffer_size=cfg.rl_buffer, policy=policy)
+
+
+def run_discovery(world, rules, policy: str = "mixed") -> ql.GraphResult:
+    """One cold-start RL discovery burst (Algorithm 1) with the agent axis
+    placed per ``rules``."""
+    cfg: LabConfig = world["cfg"]
+    return ql.discover_graph(world["k_rl"], world["local_r"],
+                             world["p_fail"], _rl_cfg(cfg, policy),
+                             rules=rules)
+
+
+def run_discovery_warm(world, rules, policy: str = "mixed") -> ql.GraphResult:
+    """Two chained bursts: a cold half followed by a burst warm-started
+    from its mesh-placed ``GraphResult.state`` — the online orchestrator's
+    re-discovery pattern."""
+    cfg: LabConfig = world["cfg"]
+    half = cfg.rl_episodes // 2
+    first = ql.discover_graph(world["k_rl"], world["local_r"],
+                              world["p_fail"], _rl_cfg(cfg, policy),
+                              n_episodes=half, rules=rules)
+    return ql.discover_graph(jax.random.fold_in(world["k_rl"], 1),
+                             world["local_r"], world["p_fail"],
+                             _rl_cfg(cfg, policy), init_state=first.state,
+                             n_episodes=cfg.rl_episodes - half, rules=rules)
+
+
 # ---------------------------------------------------------------------------
 # parity + timing harness (runs inside one child process)
 # ---------------------------------------------------------------------------
@@ -147,10 +188,20 @@ def max_abs_diff(a, b) -> float:
 
 
 def parity_report(cfg: LabConfig, mesh_size: int) -> dict:
-    """Run all three paths unsharded, at mesh=1, and at ``mesh_size``;
-    report bit-parity (digests) and max param deltas."""
+    """Run every path unsharded, at mesh=1, and at ``mesh_size``; report
+    bit-parity (digests) and max float deltas.
+
+    Discovery programs: ``disc`` (paper Eq. 4 mixed policy), ``disc_ucb``
+    (deterministic UCB1) and ``disc_warm`` (a burst resumed from a
+    mesh-placed warm-start state).  At mesh>1 their two collectives (the
+    episode-mean reward and r_net) reassociate float sums, so — like the FL
+    round — parity there is a Q-table delta plus final-edge agreement, not
+    bit equality."""
     world = build_world(cfg)
     out = {"device_count": len(jax.devices()), "mesh_size": mesh_size}
+    discoveries = (("disc", lambda r: run_discovery(world, r, "mixed")),
+                   ("disc_ucb", lambda r: run_discovery(world, r, "ucb")),
+                   ("disc_warm", lambda r: run_discovery_warm(world, r)))
 
     ref = {}
     for tag, rules in (("base", None), ("mesh1", make_rules(1)),
@@ -159,17 +210,27 @@ def parity_report(cfg: LabConfig, mesh_size: int) -> dict:
         operands = gate_operands(world, rules)
         gate = run_gate(world, params, operands, rules)
         gp, cp = run_fl_segment(world, rules)
+        graphs = {name: fn(rules) for name, fn in discoveries}
         out[f"pretrain_digest_{tag}"] = digest(params)
         out[f"gate_digest_{tag}"] = digest(gate)
         out[f"fl_digest_{tag}"] = digest((gp, cp))
+        for name, g in graphs.items():
+            out[f"{name}_digest_{tag}"] = digest((g.in_edge, g.state))
         if tag == "base":
-            ref = {"params": params, "gate": gate, "gp": gp}
+            ref = {"params": params, "gate": gate, "gp": gp,
+                   "graphs": graphs}
         else:
             out[f"pretrain_maxdiff_{tag}"] = max_abs_diff(ref["params"],
                                                           params)
             out[f"gate_maxdiff_{tag}"] = max_abs_diff(ref["gate"][:2],
                                                       gate[:2])
             out[f"fl_maxdiff_{tag}"] = max_abs_diff(ref["gp"], gp)
+            for name, g in graphs.items():
+                rg = ref["graphs"][name]
+                out[f"{name}_q_maxdiff_{tag}"] = float(
+                    jnp.max(jnp.abs(rg.q - g.q)))
+                out[f"{name}_edge_agree_{tag}"] = int(
+                    jnp.sum(rg.in_edge == g.in_edge))
     return out
 
 
@@ -186,8 +247,8 @@ def time_path(fn, *, iters: int = 5) -> float:
 
 def timing_report(cfg: LabConfig, mesh_size: int | None,
                   iters: int = 5) -> dict:
-    """Wall-time the gate program and one FL round at the given mesh size
-    (None -> the plain unsharded path)."""
+    """Wall-time the gate program, one FL round and a discovery burst at
+    the given mesh size (None -> the plain unsharded path)."""
     world = build_world(cfg)
     rules = make_rules(mesh_size)
     params = run_pretrain(world, rules)
@@ -200,9 +261,16 @@ def timing_report(cfg: LabConfig, mesh_size: int | None,
     fl_us = time_path(lambda: run_fl_segment(world, rules)[0],
                       iters=max(iters // 2, 2))
 
+    # Discovery: one cold RL burst (the orchestrator's re-discovery shape)
+    disc_us = time_path(lambda: run_discovery(world, rules),
+                        iters=max(iters // 2, 2))
+
     return {"device_count": len(jax.devices()),
             "mesh_size": 0 if mesh_size is None else mesh_size,
             "n_clients": cfg.n_clients,
             "gate_us": gate_us, "fl_segment_us": fl_us,
+            "disc_us": disc_us, "rl_episodes": cfg.rl_episodes,
             "gate_us_per_client": gate_us / cfg.n_clients,
-            "fl_us_per_client": fl_us / cfg.n_clients}
+            "fl_us_per_client": fl_us / cfg.n_clients,
+            "disc_us_per_agent_episode":
+                disc_us / (cfg.n_clients * cfg.rl_episodes)}

@@ -7,7 +7,6 @@ Works for FMNIST-like (28x28x1) and CIFAR-like (32x32x3) inputs (NHWC).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

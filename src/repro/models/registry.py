@@ -10,10 +10,8 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro import optim
-from repro import sharding as sh
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.models import common as cm
 from repro.models import transformer as tf

@@ -44,7 +44,9 @@ def apply_mrope(x, positions3, theta: float, sections):
     )                                               # (half,) in {0,1,2}
     pos = jnp.take_along_axis(
         positions3.astype(jnp.float32),
-        jnp.broadcast_to(sec_id[None, None, :], positions3.shape[:2] + (half,)).astype(jnp.int32) % positions3.shape[-1],
+        jnp.broadcast_to(sec_id[None, None, :],
+                         positions3.shape[:2] + (half,)).astype(jnp.int32)
+        % positions3.shape[-1],
         axis=-1,
     )                                               # (B, S, half)
     ang = pos * freqs

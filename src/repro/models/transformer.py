@@ -17,7 +17,6 @@ state — this is the sub-quadratic path that makes long_500k lowerable.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

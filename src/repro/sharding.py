@@ -13,6 +13,7 @@ import math
 from typing import Any, Mapping, Sequence
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Logical axis names used throughout the model code.
@@ -86,7 +87,8 @@ class ShardingRules:
             },
         )
 
-    def spec(self, logical: Sequence[str | None], dims: Sequence[int] | None = None) -> P:
+    def spec(self, logical: Sequence[str | None],
+             dims: Sequence[int] | None = None) -> P:
         """PartitionSpec for a tensor whose dims carry the given logical axes.
 
         If ``dims`` (the concrete dimension sizes) is provided, any logical
@@ -121,7 +123,8 @@ class ShardingRules:
             entries.append(ax)
         return P(*entries)
 
-    def named(self, logical: Sequence[str | None], dims: Sequence[int] | None = None) -> NamedSharding:
+    def named(self, logical: Sequence[str | None],
+              dims: Sequence[int] | None = None) -> NamedSharding:
         return NamedSharding(self.mesh, self.spec(logical, dims))
 
     def data_axes(self) -> tuple[str, ...]:
@@ -136,7 +139,8 @@ def logical_to_sharding(tree_logical, tree_shapes, rules: ShardingRules):
         lambda logical, sds: rules.named(logical, sds.shape),
         tree_logical,
         tree_shapes,
-        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
     )
 
 
@@ -182,3 +186,15 @@ def constrain_clients(tree, rules: ShardingRules | None):
         return tree
     return jax.tree.map(
         lambda x: constrain(x, rules, client_axes(x.ndim)), tree)
+
+
+def client_mean(x, rules: ShardingRules | None):
+    """Mean over the leading (possibly sharded) client/agent axis, with the
+    result constrained replicated — on a mesh this is *the* collective of
+    the discovery plane (a psum-style all-reduce of per-shard partial sums),
+    the only cross-agent communication Algorithm 1 needs.  ``rules=None``
+    degrades to a plain mean."""
+    m = jnp.mean(x, axis=0)
+    if rules is None:
+        return m
+    return constrain(m, rules, (None,) * m.ndim)

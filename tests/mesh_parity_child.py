@@ -1,4 +1,6 @@
-"""Child process for ``test_mesh_parity``: prints a meshlab parity report.
+"""Child process for ``test_mesh_parity``: prints a meshlab parity report
+covering all four device programs — exchange gate, AE pretraining, an FL
+segment, and the RL discovery bursts (mixed / UCB / warm-started).
 
 Must be launched with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
 in the environment — the CPU device count is fixed at backend init, so the

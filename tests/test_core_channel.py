@@ -1,7 +1,6 @@
 """Channel model properties: P_D monotonicity, fading-step positivity and
 path-loss symmetry, mobility-step confinement, uniform_graph validity."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 

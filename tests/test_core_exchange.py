@@ -7,7 +7,6 @@ import pytest
 
 from repro.core import exchange as EX
 from repro.models.autoencoder import AEConfig, init_ae, recon_loss
-import repro.models.autoencoder as ae
 
 
 AE_CFG = AEConfig(28, 28, 1, widths=(8, 16), latent_dim=16)

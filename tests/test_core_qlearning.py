@@ -2,8 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro import sharding as sh
 from repro.core import qlearning as QL
 
 
@@ -70,6 +72,65 @@ def test_mean_reward_improves_over_training():
     early = float(jnp.mean(res.ep_mean_local[:90]))
     late = float(jnp.mean(res.ep_mean_local[-90:]))
     assert late > early
+
+
+def _world(n=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    local_r = jax.random.uniform(jax.random.fold_in(key, 1), (n, n)) * 4.0
+    local_r = local_r.at[jnp.arange(n), jnp.arange(n)].set(-1e9)
+    p_fail = jax.random.uniform(jax.random.fold_in(key, 2), (n, n)) * 0.3
+    return key, local_r, p_fail
+
+
+def _mesh1_rules():
+    return sh.ShardingRules.default(jax.make_mesh((1,), ("data",)))
+
+
+def _assert_trees_equal(a, b, what):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+@pytest.mark.parametrize("policy", ["mixed", "ucb"])
+def test_sharded_mesh1_bit_identical(policy):
+    """discover_graph under a 1-device mesh is bit-for-bit the unsharded
+    program for both exploration policies — the acceptance bar for passing
+    ``rules`` unconditionally (mirrors the mesh=4 subprocess suite)."""
+    key, local_r, p_fail = _world()
+    cfg = QL.RLConfig(n_episodes=120, buffer_size=30, policy=policy)
+    base = QL.discover_graph(key, local_r, p_fail, cfg)
+    shrd = QL.discover_graph(key, local_r, p_fail, cfg, rules=_mesh1_rules())
+    _assert_trees_equal(base._replace(state=None),
+                        shrd._replace(state=None), policy)
+    _assert_trees_equal(base.state, shrd.state, policy)
+
+
+@pytest.mark.parametrize("policy", ["mixed", "ucb"])
+def test_sharded_warm_start_mesh1_bit_identical(policy):
+    """A sharded burst resumed from a *mesh-placed* ``GraphResult.state``
+    is bit-identical to the unsharded warm-start path: placement survives
+    the segment boundary (the online orchestrator's re-discovery pattern)
+    without perturbing a single bit of Algorithm 1."""
+    key, local_r, p_fail = _world(seed=3)
+    rules = _mesh1_rules()
+    cfg = QL.RLConfig(n_episodes=90, buffer_size=30, policy=policy)
+    cold_base = QL.discover_graph(key, local_r, p_fail, cfg)
+    cold_shrd = QL.discover_graph(key, local_r, p_fail, cfg, rules=rules)
+    k2 = jax.random.fold_in(key, 1)
+    warm_base = QL.discover_graph(k2, local_r, p_fail, cfg,
+                                  init_state=cold_base.state, n_episodes=45)
+    warm_shrd = QL.discover_graph(k2, local_r, p_fail, cfg,
+                                  init_state=cold_shrd.state, n_episodes=45,
+                                  rules=rules)
+    assert warm_shrd.ep_mean_local.shape == (45,)
+    _assert_trees_equal(warm_base.state, warm_shrd.state, policy)
+    _assert_trees_equal(warm_base.in_edge, warm_shrd.in_edge, policy)
+    # cross-over: an unsharded warm start consuming a mesh-placed state is
+    # also exact (placement is a property of the buffers, not the math)
+    warm_x = QL.discover_graph(k2, local_r, p_fail, cfg,
+                               init_state=cold_shrd.state, n_episodes=45)
+    _assert_trees_equal(warm_base.state, warm_x.state, policy)
 
 
 def test_uniform_graph_no_self():

@@ -1,12 +1,10 @@
 """Data substrate: synthetic generators + partitioners + token topics."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import partition_by_classes
 from repro.data.synthetic import (cifar_like, fmnist_like,
-                                  fmnist_like_split, make_image_dataset)
+                                  fmnist_like_split)
 from repro.data.tokens import make_client_token_data, topic_token_batch
 
 

@@ -3,14 +3,12 @@ arch lowers + compiles against a real (1-device) mesh with the production
 sharding rules.  The full 512-device sweep runs via repro.launch.dryrun."""
 import dataclasses
 
-import jax
 import pytest
 
 from repro.configs import INPUT_SHAPES, get_smoke_config
 from repro.launch import specs as sp
-from repro.launch.dryrun import build_lowerable, lower_and_compile
+from repro.launch.dryrun import lower_and_compile
 from repro.launch.mesh import make_host_mesh
-from repro.sharding import ShardingRules
 
 
 def _tiny_shape(name):

@@ -1,7 +1,6 @@
 """Determinism contract of the online orchestrator: under the ``static``
 scenario with re-discovery disabled (mode="oneshot"), segmented simulation
 reproduces the one-shot ``run_pipeline`` + ``fl_train`` bit-for-bit."""
-import dataclasses
 
 import jax
 import numpy as np

@@ -7,7 +7,6 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
-from repro.kernels.kmeans_assign import kmeans_assign_pallas
 
 
 @pytest.mark.parametrize("n", [8, 100, 1000])

@@ -1,17 +1,22 @@
-"""Sharded vs single-device parity of the client-stacked data plane.
+"""Sharded vs single-device parity of the client-stacked device planes.
 
 A child process runs under ``--xla_force_host_platform_device_count=4`` (the
 parent's device count is already frozen) and reports digests/deltas for the
-exchange gate, AE pretraining and one FL segment at mesh sizes 1 and 4
+exchange gate, AE pretraining, one FL segment and the RL discovery bursts
+(mixed policy, UCB, and a warm-started resume) at mesh sizes 1 and 4
 against the plain unsharded program (``repro.meshlab.parity_report``).
 
 Contract:
   * mesh=1 placement is **bit-identical** to the single-device path for all
-    three programs (the acceptance bar for enabling sharding by default);
+    programs (the acceptance bar for enabling sharding by default);
   * at mesh=4 the gate and pretraining stay bit-identical — per-client work
     has no cross-client reduction, so shards compute the same bits;
   * the FL round's FedAvg mean is a cross-shard all-reduce whose float sums
-    reassociate — parity there is a ~1e-7 param delta, not bit equality.
+    reassociate — parity there is a ~1e-7 param delta, not bit equality;
+  * the discovery plane's two collectives (episode-mean reward, r_net)
+    reassociate the same way and the deltas feed back through the Q-table
+    accumulation, so parity at mesh=4 is a small Q delta plus agreement of
+    the final Eq. 7 links.
 """
 import json
 import os
@@ -48,7 +53,7 @@ def report():
 
 def test_mesh1_bit_identical_to_single_device(report):
     """Sharding rules on a 1-device mesh change nothing, bit for bit."""
-    for path in ("gate", "pretrain", "fl"):
+    for path in ("gate", "pretrain", "fl", "disc", "disc_ucb", "disc_warm"):
         assert report[f"{path}_digest_mesh1"] == \
             report[f"{path}_digest_base"], path
 
@@ -67,3 +72,14 @@ def test_fl_segment_sharded_parity(report):
     """The all-reduced FedAvg mean reassociates float sums across shards;
     anything beyond ~1e-5 would be a real partitioning bug."""
     assert report["fl_maxdiff_mesh4"] < 1e-5
+
+
+def test_discovery_sharded_parity(report):
+    """Each episode folds the two all-reduced scalars back into the Q
+    accumulation, so reassociation deltas compound over the burst — but
+    stay orders of magnitude below reward scale; the discovered graph
+    (Eq. 7 argmax) should be unaffected."""
+    n = 8  # LabConfig().n_clients
+    for name in ("disc", "disc_ucb", "disc_warm"):
+        assert report[f"{name}_q_maxdiff_mesh4"] < 1e-3, name
+        assert report[f"{name}_edge_agree_mesh4"] == n, name

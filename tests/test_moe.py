@@ -3,7 +3,6 @@ aux-loss value, and hypothesis property tests."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 import repro.models.common as cm

@@ -1,7 +1,6 @@
 """End-to-end behaviour: the full paper pipeline (PCA -> K-means++ -> RL
 graph -> AE-gated exchange -> FL) improves over the non-i.i.d. baseline."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
