@@ -19,10 +19,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (beyond_paper, dryrun_table, dynamic_scenarios,
-                        fig3_heatmap, fig4_links, fig5_convergence,
-                        fig6_stragglers, kernel_bench, roofline_table,
-                        shard_scaling)
+from benchmarks import (beyond_paper, cluster_bench, dryrun_table,
+                        dynamic_scenarios, fig3_heatmap, fig4_links,
+                        fig5_convergence, fig6_stragglers, kernel_bench,
+                        roofline_table, shard_scaling)
 
 BENCHES = {
     "fig3": fig3_heatmap.main,
@@ -30,6 +30,7 @@ BENCHES = {
     "fig5": fig5_convergence.main,
     "fig6": fig6_stragglers.main,
     "kernels": kernel_bench.main,
+    "cluster": cluster_bench.main,
     "roofline": roofline_table.main,
     "dryrun": dryrun_table.main,
     "beyond": beyond_paper.main,

@@ -60,10 +60,13 @@ def child_main(mesh: int, n_clients: int, quick: bool, iters: int) -> None:
                                == par["pretrain_digest_base"])
     rep["mesh1_bitwise"] = all(
         par[f"{p}_digest_mesh1"] == par[f"{p}_digest_base"]
-        for p in ("gate", "pretrain", "fl", "disc", "disc_ucb", "disc_warm"))
+        for p in ("gate", "pretrain", "fl", "cluster",
+                  "disc", "disc_ucb", "disc_warm"))
     rep["fl_maxdiff"] = par[f"fl_maxdiff_{tag}"]
     rep["disc_q_maxdiff"] = par[f"disc_q_maxdiff_{tag}"]
     rep["disc_edge_agree"] = par[f"disc_edge_agree_{tag}"]
+    rep["cluster_loop_bitwise"] = par["cluster_loop_bitwise"]
+    rep["cluster_cents_maxdiff"] = par[f"cluster_cents_maxdiff_{tag}"]
     print(_TAG + json.dumps(rep), flush=True)
 
 
@@ -104,10 +107,17 @@ def main(quick: bool = True) -> None:
               f"pretrain_bitwise={r['pretrain_bitwise']}")
         disc_ratio = (r["disc_us_per_agent_episode"]
                       / ref["disc_us_per_agent_episode"])
+        cluster_ratio = (r["cluster_us_per_client"]
+                         / ref["cluster_us_per_client"])
         print(f"shard_fl_mesh{m}_n{n},{r['fl_segment_us']:.0f},{common};"
               f"us_per_client={r['fl_us_per_client']:.1f};"
               f"per_client_vs_mesh1={fl_ratio:.2f};"
               f"fl_maxdiff_vs_single={r['fl_maxdiff']:.2e}")
+        print(f"shard_cluster_mesh{m}_n{n},{r['cluster_us']:.0f},{common};"
+              f"us_per_client={r['cluster_us_per_client']:.1f};"
+              f"per_client_vs_mesh1={cluster_ratio:.2f};"
+              f"loop_bitwise={r['cluster_loop_bitwise']};"
+              f"cents_maxdiff_vs_single={r['cluster_cents_maxdiff']:.2e}")
         print(f"shard_disc_mesh{m}_n{n},{r['disc_us']:.0f},{common};"
               f"episodes={r['rl_episodes']};"
               f"us_per_agent_ep={r['disc_us_per_agent_episode']:.2f};"

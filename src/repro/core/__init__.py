@@ -1,5 +1,7 @@
 """The paper's contribution: RL-driven smart information exchange for
 unsupervised D2D-enabled FL."""
+from repro.core.batching import (ClientData, as_client_data,  # noqa: F401
+                                 client_data_from_lists)
 from repro.core.channel import ChannelConfig, failure_prob, make_rss  # noqa: F401
 from repro.core.dissimilarity import lambda_matrix, median_heuristic_beta  # noqa: F401
 from repro.core.exchange import ExchangeConfig, run_exchange  # noqa: F401
@@ -7,6 +9,7 @@ from repro.core import kmeans  # noqa: F401  (module; fit = kmeans.kmeans)
 from repro.core.kmeans import kmeans_plus_plus_init  # noqa: F401
 from repro.core.pca import PCA, fit_pca, fit_pca_federated  # noqa: F401
 from repro.core.pipeline import (PipelineConfig, PipelineResult,  # noqa: F401
+                                 cluster_clients, link_rewards,
                                  run_pipeline, split_pipeline_keys)
 from repro.core.qlearning import RLConfig, discover_graph, uniform_graph  # noqa: F401
 from repro.core.rewards import RewardConfig, local_reward_matrix  # noqa: F401

@@ -1,9 +1,16 @@
-"""Client-axis batching utilities shared by the FL trainer and the
-exchange gate engine.
+"""The stacked, mask-padded client plane: :class:`ClientData` plus the
+lower-level stackers it is built from.
 
-Per-client arrays are ragged (each client holds n_i samples); every batched
-device program in this repo works on one dense stack with a leading client
-axis instead:
+Per-client arrays are ragged (each client holds n_i samples).  Since PR 5
+the *source of truth* for client data is not a Python list of ragged arrays
+but one :class:`ClientData` pytree — a dense ``(N, cap, ...)`` stack with
+true ``sizes`` and (optionally) matching padded ``labels`` — built **once**
+at the API boundary (``core/pipeline.py``, ``core/exchange.py``,
+``fl/trainer.py`` and the dynamics orchestrator all accept either form and
+convert exactly once via :func:`as_client_data`).  Every device program
+then works on the stack directly; nothing re-pads per stage.
+
+Lower-level pieces (also used stand-alone):
 
   * :func:`stack_clients` pads each client's array to the common max length
     by cyclic tiling and stacks to (N, max_n, ...) plus the true sizes.
@@ -23,13 +30,101 @@ count that does not divide the mesh degrades to replication (see
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import sharding as sh
+
+
+class ClientData(NamedTuple):
+    """The canonical stacked client representation (one pytree, ready for
+    ``jax.vmap`` / mesh placement on the CLIENTS axis).
+
+    data:   (N, cap, ...) — per-client samples padded to ``cap`` rows by
+            cyclic tiling (every padding row is a real sample, so uniform
+            index sampling in [0, size_i) stays unbiased and padding never
+            needs a sentinel value).
+    sizes:  (N,) int32 — true per-client sample counts; rows at index >=
+            size_i are padding and carry zero weight under :meth:`mask`.
+    labels: optional (N, cap) — labels padded alongside ``data`` (evaluation
+            only; ``None`` for unlabeled worlds).
+
+    Rows beyond ``sizes`` are *unspecified after an exchange*: the device
+    scatter overwrites the tail in place, so only ``data[i, :sizes[i]]`` is
+    meaningful — exactly what :meth:`data_list` returns.
+    """
+    data: jax.Array
+    sizes: jax.Array
+    labels: Optional[jax.Array] = None
+
+    @property
+    def n_clients(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def cap(self) -> int:
+        return self.data.shape[1]
+
+    def mask(self, dtype=jnp.float32) -> jax.Array:
+        """(N, cap) {0,1} mask selecting each client's real samples."""
+        return (jnp.arange(self.cap)[None, :]
+                < self.sizes[:, None]).astype(dtype)
+
+    def data_list(self) -> list:
+        """Back to the ragged per-client list (bit-exact round trip)."""
+        sizes = np.asarray(self.sizes)
+        return [self.data[i, :int(sizes[i])] for i in range(self.n_clients)]
+
+    def label_list(self) -> Optional[list]:
+        if self.labels is None:
+            return None
+        sizes = np.asarray(self.sizes)
+        return [self.labels[i, :int(sizes[i])] for i in range(self.n_clients)]
+
+
+def _tile_to(arr: np.ndarray, cap: int) -> np.ndarray:
+    reps = -(-cap // arr.shape[0])
+    return np.tile(arr, (reps,) + (1,) * (arr.ndim - 1))[:cap]
+
+
+def client_data_from_lists(datasets: Sequence, labels: Optional[Sequence]
+                           = None, cap: Optional[int] = None,
+                           rules: Optional[sh.ShardingRules] = None
+                           ) -> ClientData:
+    """Build a :class:`ClientData` from ragged per-client arrays.
+
+    ``cap`` defaults to the max client size; a larger value leaves headroom
+    so a later exchange scatter need not grow the buffer.  Assembly happens
+    host-side in numpy — one device transfer for the whole stack; with
+    ``rules`` it lands client-sharded over the mesh.
+    """
+    sizes_np = np.asarray([d.shape[0] for d in datasets], np.int32)
+    cap = int(sizes_np.max()) if cap is None else int(cap)
+    if cap < int(sizes_np.max()):
+        raise ValueError(f"cap={cap} < largest client ({int(sizes_np.max())})")
+    data = np.stack([_tile_to(np.asarray(d), cap) for d in datasets])
+    lab = None
+    if labels is not None:
+        lab = np.stack([_tile_to(np.asarray(l), cap) for l in labels])
+    cd = ClientData(jnp.asarray(data), jnp.asarray(sizes_np),
+                    None if lab is None else jnp.asarray(lab))
+    return sh.shard_clients(cd, rules)
+
+
+def as_client_data(datasets, labels=None, cap: Optional[int] = None,
+                   rules: Optional[sh.ShardingRules] = None) -> ClientData:
+    """The API-boundary conversion: a :class:`ClientData` passes through
+    (re-placed per ``rules``; ``labels``/``cap`` must then be unset), a
+    ragged list converts exactly once."""
+    if isinstance(datasets, ClientData):
+        if labels is not None or cap is not None:
+            raise ValueError("labels/cap only apply when converting lists; "
+                             "a ClientData already carries both")
+        return sh.shard_clients(datasets, rules)
+    return client_data_from_lists(datasets, labels, cap, rules)
 
 
 def stack_clients(datasets: Sequence, rules: Optional[sh.ShardingRules] = None
@@ -43,18 +138,8 @@ def stack_clients(datasets: Sequence, rules: Optional[sh.ShardingRules] = None
     transfer for the whole stack instead of ~2N small tile/stack dispatches.
     With ``rules`` the transfer lands client-sharded over the mesh.
     """
-    sizes_np = np.asarray([d.shape[0] for d in datasets], np.int32)
-    max_n = int(sizes_np.max())
-    padded = []
-    for d in datasets:
-        d = np.asarray(d)
-        reps = -(-max_n // d.shape[0])
-        tiled = np.tile(d, (reps,) + (1,) * (d.ndim - 1))[:max_n]
-        padded.append(tiled)
-    if rules is not None:
-        data, sizes = sh.shard_clients((np.stack(padded), sizes_np), rules)
-        return data, sizes
-    return jnp.asarray(np.stack(padded)), jnp.asarray(sizes_np)
+    cd = client_data_from_lists(datasets, rules=rules)
+    return cd.data, cd.sizes
 
 
 def valid_mask(sizes, max_n: int, dtype=jnp.float32,

@@ -8,6 +8,14 @@ For receiver c_i (centroids v_i, k_i of them) and transmitter c_j
 
 i.e. the number of c_j clusters that are far from *every* c_i cluster and
 that c_j trusts c_i with — the clusters c_i would gain diversity from.
+
+Both entry points take either the legacy ragged form (a list of per-client
+(k_i, d) centroid arrays + a list of T_j trust matrices) or the array-first
+stacked form ((N, k, d) centroids from ``kmeans_batched`` + (N, N, k)
+stacked trust): the stacked path computes every pair in one broadcast
+tensor — jit-friendly and bit-identical to the pairwise loop, since the
+distance reduction is per-(i, j, a, b) over the same d axis and the
+lambda accumulation is an exact int32 sum.
 """
 from __future__ import annotations
 
@@ -21,10 +29,41 @@ def lambda_pair(cents_i, cents_j, trust_col, beta: float):
     return jnp.sum(far.astype(jnp.int32) * trust_col.astype(jnp.int32))
 
 
+def stack_trust(trust) -> jnp.ndarray:
+    """List of T_j (N, k) -> (N, N, k) with [j, i, m] = T_j[i, m].
+
+    Requires a uniform cluster count (the pipeline's setting); ragged k_j
+    worlds must use the list form."""
+    if not isinstance(trust, (list, tuple)):
+        return jnp.asarray(trust)
+    k = trust[0].shape[1]
+    if any(t.shape[1] != k for t in trust):
+        raise ValueError("stack_trust needs a uniform cluster count; got "
+                         f"{[t.shape[1] for t in trust]}")
+    return jnp.stack([jnp.asarray(t) for t in trust])
+
+
+def lambda_matrix_stacked(cents, trust, beta: float):
+    """Stacked-form lambda: cents (N, k, d), trust (N, N, k) (or a uniform-k
+    list).  Returns (N, N) int32 with lambda[i, j] (diagonal = 0)."""
+    trust = stack_trust(trust)
+    # d[i, j, a, b] = ||v_ia - v_jb||
+    d = jnp.linalg.norm(
+        cents[:, None, :, None, :] - cents[None, :, None, :, :], axis=-1)
+    far = (d > beta).all(axis=2)                        # (N, N, k_j)
+    trust_rx = jnp.swapaxes(trust, 0, 1)                # [i, j, m] = T_j[i, m]
+    lam = jnp.sum(far.astype(jnp.int32) * trust_rx.astype(jnp.int32), axis=-1)
+    n = lam.shape[0]
+    return lam * (1 - jnp.eye(n, dtype=jnp.int32))
+
+
 def lambda_matrix(centroids, trust, beta: float):
-    """centroids: list of (k_i, d); trust: list of T_j (N, k_j).
+    """centroids: list of (k_i, d) — or stacked (N, k, d); trust: list of
+    T_j (N, k_j) — or stacked (N, N, k).
 
     Returns (N, N) int32 with lambda[i, j] (diagonal = 0)."""
+    if not isinstance(centroids, (list, tuple)):
+        return lambda_matrix_stacked(centroids, trust, beta)
     n = len(centroids)
     rows = []
     for i in range(n):
@@ -39,10 +78,18 @@ def lambda_matrix(centroids, trust, beta: float):
     return jnp.stack(rows)
 
 
-def median_heuristic_beta(centroids, scale: float = 1.0) -> float:
+def median_heuristic_beta(centroids, scale: float = 1.0):
     """A data-driven default for the distance threshold beta: the median of
-    all cross-client centroid distances, scaled."""
-    cents = jnp.concatenate(centroids, axis=0)
+    all cross-client centroid distances, scaled.
+
+    Accepts the ragged list or the stacked (N, k, d) form; the stacked path
+    stays a device scalar (traceable inside the jitted clustering program —
+    reshape order matches the list concatenation, so the two forms agree
+    bit-for-bit)."""
+    if isinstance(centroids, (list, tuple)):
+        cents = jnp.concatenate(centroids, axis=0)
+    else:
+        cents = centroids.reshape(-1, centroids.shape[-1])
     d = jnp.linalg.norm(cents[:, None] - cents[None, :], axis=-1)
     iu = jnp.triu_indices(d.shape[0], 1)
-    return float(jnp.median(d[iu]) * scale)
+    return jnp.median(d[iu]) * scale

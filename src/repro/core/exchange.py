@@ -17,29 +17,33 @@ Two interchangeable data planes implement the gate (``ExchangeConfig.method``
 or the ``method=`` argument of :func:`run_exchange`):
 
 ``"batched"`` (default)
-    The device-resident engine.  AE pretraining is vmapped across all N
-    clients in one jit over a padded client stack (exact masked-mean grads,
-    no per-client retrace).  Reserve subsets are assembled into one masked
-    (N, K, R, H, W, C) tensor, gathered receiver-side along the discovered
-    graph, and *all* (receiver, cluster) pairs are scored against all
-    receiver autoencoders in a single jitted vmapped call whose masked
+    The device-resident engine over the :class:`~repro.core.batching
+    .ClientData` stack.  AE pretraining is vmapped across all N clients in
+    one jit with exact masked-mean grads; reserve rows are *gathered* from
+    the stack on device (transmitter-side row lookup, then a receiver-side
+    gather along the client axis — the D2D communication), every
+    (receiver, cluster) pair is scored in one vmapped call whose masked
     reconstruction-MSE tail is a fused Pallas kernel on TPU
-    (``kernels/recon_gate.py``; jnp oracle on CPU).  Channel failures are
-    sampled with ``jax.random`` inside the same program.  Only the final
-    ragged concat of accepted subsets runs on host.
+    (``kernels/recon_gate.py``; jnp oracle on CPU), and accepted subsets
+    are *scattered* straight into each receiver's ``ClientData`` slot — a
+    capacity-masked compaction (cumsum of the keep mask -> destination
+    rows) with an explicit overflow policy (``ExchangeConfig.overflow``).
+    Channel failures are sampled with ``jax.random`` inside the same
+    program.  No client datapoint touches the host: the only host work is
+    deriving the reserve *indices* (a few ints per cluster).
 
 ``"loop"``
     The reference host-side triple loop, one jitted reconstruction-loss
-    dispatch per (receiver, cluster) pair.  Kept for parity testing: both
-    planes derive reserves, channel draws and pretraining keys identically,
-    so gate decisions and ``moved_counts`` match bit-for-bit on a fixed
-    seed.
+    dispatch per (receiver, cluster) pair, with a ragged numpy concat.
+    Kept for parity testing: both planes derive reserves, channel draws and
+    pretraining keys identically, so gate decisions, ``moved_counts`` and
+    the post-exchange datasets match bit-for-bit on a fixed seed.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +51,12 @@ import numpy as np
 
 from repro import sharding as sh
 from repro.core import batching
+from repro.core.batching import ClientData, as_client_data, \
+    client_data_from_lists
 from repro.kernels import ops
 from repro.models import autoencoder as ae
+
+OVERFLOW_POLICIES = ("grow", "drop", "error")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,13 +66,54 @@ class ExchangeConfig:
     pretrain_lr: float = 1e-2
     apply_channel_failure: bool = False
     method: str = "batched"         # "batched" | "loop"
+    # Receiver-capacity policy of the batched plane's device scatter:
+    #   "grow"  — (default) the output ClientData's cap grows by the round's
+    #             largest possible transfer, so nothing is ever dropped
+    #             (list-plane semantics; the shape is static per call).
+    #   "drop"  — cap is fixed; accepted samples that would land past it are
+    #             dropped deterministically from the tail of the transfer.
+    #   "error" — cap is fixed and any overflow raises (host-checks the
+    #             overflow flag, so this policy synchronises).
+    overflow: str = "grow"
 
 
-class ExchangeResult(NamedTuple):
-    datasets: list            # new per-client data arrays (n_i', H, W, C)
-    labels: list              # matching labels (for evaluation only)
-    moved_counts: np.ndarray  # (N,) datapoints received per client
-    gate_decisions: list      # per-client list of (tx, cluster, accepted)
+@dataclasses.dataclass
+class ExchangeResult:
+    """Exchange output.  ``client_data`` is the device-resident truth;
+    ``datasets``/``labels``/``moved_counts``/``gate_decisions`` are lazy
+    host views so an online driver that only threads ``client_data`` onward
+    never forces a transfer."""
+    client_data: ClientData
+    moved_dev: object                    # (N,) datapoints received, device
+    fail: Optional[jax.Array] = None     # (N,) sampled channel failures
+    accept: Optional[jax.Array] = None   # (N, K) gate decisions, device
+    _decisions: Optional[list] = None    # eager for the loop plane
+    _ctx: Optional[tuple] = None         # lazy-decision inputs (batched)
+
+    @property
+    def datasets(self) -> list:
+        return self.client_data.data_list()
+
+    @property
+    def labels(self) -> Optional[list]:
+        return self.client_data.label_list()
+
+    @property
+    def moved_counts(self) -> np.ndarray:
+        return np.asarray(self.moved_dev)
+
+    @property
+    def gate_decisions(self) -> list:
+        """Per-link decisions ``(rx, tx, cluster, accepted)`` in loop-plane
+        order (``cluster == -1``: the sampled channel failed).  Materialised
+        on first access for the batched plane."""
+        if self._decisions is None and self._ctx is not None:
+            trust_np, sel, in_edge, apply_channel = self._ctx
+            self._decisions = _build_decisions(
+                trust_np, sel, np.asarray(in_edge),
+                np.asarray(self.fail), np.asarray(self.accept),
+                apply_channel)
+        return self._decisions
 
 
 # ---------------------------------------------------------------------------
@@ -104,21 +153,22 @@ def _pretrain_step(p, x, m, ae_cfg, lr, rules):
 def pretrain_autoencoders_batched(key, datasets, ae_cfg, cfg: ExchangeConfig,
                                   rules: sh.ShardingRules | None = None):
     """All N clients in one jit: vmapped init + vmapped masked-mean grads
-    over the padded client stack.  Returns a stacked-params pytree with a
-    leading client axis.  Per-client keys and the masked loss match the
-    reference path's math exactly (padding carries zero weight).  With
+    over the client stack (a ragged list converts once, a
+    :class:`ClientData` is consumed as-is).  Returns a stacked-params pytree
+    with a leading client axis.  Per-client keys and the masked loss match
+    the reference path's math exactly (padding carries zero weight).  With
     ``rules`` the client stack (data, masks, params) shards over the mesh;
     pretraining has no cross-client reduction, so each shard trains its
     clients entirely locally."""
-    data, sizes = batching.stack_clients(datasets, rules)
-    n, max_n = data.shape[:2]
-    mask = batching.valid_mask(sizes, max_n, rules=rules)
+    cd = as_client_data(datasets, rules=rules)
+    n = cd.n_clients
+    mask = sh.constrain_clients(cd.mask(), rules) if rules else cd.mask()
     keys = sh.shard_clients(jax.random.split(key, n), rules)
     params = sh.shard_clients(
         jax.vmap(lambda k: ae.init_ae(k, ae_cfg))(keys), rules)
 
     for _ in range(cfg.pretrain_steps):
-        params = _pretrain_step(params, data, mask, ae_cfg,
+        params = _pretrain_step(params, cd.data, mask, ae_cfg,
                                 cfg.pretrain_lr, rules)
     return params
 
@@ -128,19 +178,25 @@ def pretrain_autoencoders_batched(key, datasets, ae_cfg, cfg: ExchangeConfig,
 # data planes, so gate decisions are bit-comparable across them)
 # ---------------------------------------------------------------------------
 
-def _select_reserves(key, assignments, n_clusters_list, r: int):
+def _select_reserves(key, assignments, n_clusters_list, r: int, sizes=None):
     """Seeded random reserve subsets, per (transmitter j, cluster m).
 
+    ``assignments`` is a per-client list of (n_j,) arrays or the stacked
+    (N, cap) form (then ``sizes`` marks each client's valid prefix).
     Clusters larger than ``r`` contribute a uniform random subset (sorted,
     sampled without replacement from the exchange key); smaller clusters
-    contribute all members.  The deterministic-prefix selection this
-    replaces biased reserves toward K-means enumeration order and
-    understated transfer diversity.
+    contribute all members.  Only *indices* ever reach the host.
     """
     rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    if isinstance(assignments, (list, tuple)):
+        rows = [np.asarray(a) for a in assignments]
+    else:
+        assignments = np.asarray(assignments)
+        sizes = np.asarray(sizes)
+        rows = [assignments[j, :int(sizes[j])]
+                for j in range(assignments.shape[0])]
     sel = []
-    for j, assign in enumerate(assignments):
-        a = np.asarray(assign)
+    for j, a in enumerate(rows):
         row = []
         for m in range(n_clusters_list[j]):
             idx = np.nonzero(a == m)[0]
@@ -149,6 +205,45 @@ def _select_reserves(key, assignments, n_clusters_list, r: int):
             row.append(idx)
         sel.append(row)
     return sel
+
+
+def _sel_tensors(sel, n: int, k_max: int, r: int):
+    """Ragged reserve indices -> ((N, K, R) int32 rows, (N, K, R) mask)."""
+    sel_idx = np.zeros((n, k_max, r), np.int32)
+    sel_mask = np.zeros((n, k_max, r), np.float32)
+    for j, row in enumerate(sel):
+        for m, idx in enumerate(row):
+            if idx.size:
+                sel_idx[j, m, :idx.size] = idx
+                sel_mask[j, m, :idx.size] = 1.0
+    return sel_idx, sel_mask
+
+
+def _stack_trust_padded(trust_np, n: int, k_max: int):
+    """(N_tx, N_rx, K) stacked trust, zero-padded over ragged k_j."""
+    t = np.zeros((n, n, k_max), np.int8)
+    for j, tj in enumerate(trust_np):
+        t[j, :, :tj.shape[1]] = tj
+    return t
+
+
+def _build_decisions(trust_np, sel, in_edge, fail, accept, apply_channel):
+    """Decision tuples in loop-plane order from the device gate outputs."""
+    decisions = []
+    for i in range(len(trust_np)):
+        j = int(in_edge[i])
+        if j == i:
+            continue
+        if apply_channel and fail[i]:
+            decisions.append((i, j, -1, False))
+            continue
+        for m in range(trust_np[j].shape[1]):
+            if int(trust_np[j][i, m]) == 0:
+                continue
+            if sel[j][m].size == 0:
+                continue
+            decisions.append((i, j, m, bool(accept[i, m])))
+    return decisions
 
 
 # ---------------------------------------------------------------------------
@@ -190,9 +285,8 @@ def _gate_loop(datasets, labels, trust, in_edge, sel, fail_u, p_fail,
                 new_data[i] = np.concatenate([new_data[i], data_j[idx]])
                 new_labels[i] = np.concatenate([new_labels[i], labels_j[idx]])
                 moved[i] += idx.size
-    return ExchangeResult([jnp.asarray(d) for d in new_data],
-                          [jnp.asarray(l) for l in new_labels],
-                          moved, decisions)
+    return ExchangeResult(client_data_from_lists(new_data, new_labels),
+                          moved, _decisions=decisions)
 
 
 @functools.partial(jax.jit, static_argnums=(9, 10, 11))
@@ -200,8 +294,8 @@ def _gate_scores(params, own, own_mask, cand, cand_mask, allowed, fail_u,
                  p_fail, in_edge, ae_cfg, apply_channel, rules=None):
     """One device program scoring the whole gate.
 
-    params: stacked AE pytree (leading client axis); own: (N, M, H, W, C)
-    padded client stack with own_mask (N, M); cand: (N, K, R, H, W, C)
+    params: stacked AE pytree (leading client axis); own: (N, cap, H, W, C)
+    padded client stack with own_mask (N, cap); cand: (N, K, R, H, W, C)
     receiver-aligned reserve tensor with cand_mask (N, K, R).
     Returns (base (N,), scores (N, K), fail (N,), accept (N, K)).
 
@@ -236,97 +330,108 @@ def _gate_scores(params, own, own_mask, cand, cand_mask, allowed, fail_u,
     return base, scores, fail, accept
 
 
-def _assemble_gate_inputs(data_np, trust_np, in_edge, sel, fail_u, p_fail,
-                          r: int, rules: sh.ShardingRules | None = None):
-    """Host-side assembly of the gate engine's device operands.
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _exchange_device(ae_cfg, apply_channel, out_cap, rules, params, data,
+                     sizes, labels, sel_idx, sel_mask, trust_s, fail_u,
+                     p_fail, in_edge):
+    """The whole batched exchange as one device program.
 
-    ``data_np``/``trust_np`` are the *already materialised* per-client numpy
-    arrays (callers hold them for the ragged concat anyway — converting here
-    too would double the device-to-host transfer of every client dataset).
-    Returns (own, own_mask, cand, cand_mask, allowed, fail_u, p_fail,
-    in_edge) ready for :func:`_gate_scores` — each with its leading client
-    axis placed per ``rules``.  The reserve tensor is gathered receiver-side
-    *before* the transfer, so on a mesh every shard receives only its own
-    receivers' candidates.
+    Gathers each transmitter's reserve rows from the stack (row-local
+    ``take_along_axis``), gathers them receiver-side along the client axis
+    (the D2D communication — on a mesh, the only cross-shard data movement),
+    scores every (receiver, cluster) pair with :func:`_gate_scores`, and
+    scatters accepted subsets into each receiver's slot: the keep mask's
+    exclusive cumsum assigns destination rows ``sizes[i] + offset`` in
+    cluster-major order (identical to the loop plane's concat order), and
+    rows past ``out_cap`` fall off the scatter (``mode="drop"``) — the
+    capacity mask.  Returns (new ClientData, moved, base, scores, fail,
+    accept, overflowed).
     """
-    n = len(data_np)
-    k_max = max(t.shape[1] for t in trust_np)
-    sample_shape = data_np[0].shape[1:]
+    (data, sizes, labels, sel_idx, sel_mask, fail_u, in_edge) = \
+        sh.constrain_clients(
+            (data, sizes, labels, sel_idx, sel_mask, fail_u, in_edge), rules)
+    n, cap = data.shape[:2]
+    k, r = sel_idx.shape[1:3]
+    own_mask = (jnp.arange(cap)[None, :] < sizes[:, None]).astype(jnp.float32)
 
-    # masked per-transmitter reserve tensor, gathered receiver-side
-    res_data = np.zeros((n, k_max, r) + sample_shape, data_np[0].dtype)
-    res_mask = np.zeros((n, k_max, r), np.float32)
-    for j in range(n):
-        for m, idx in enumerate(sel[j]):
-            if idx.size:
-                res_data[j, m, :idx.size] = data_np[j][idx]
-                res_mask[j, m, :idx.size] = 1.0
-    in_edge = np.asarray(in_edge)
-    cand = res_data[in_edge]
-    cand_mask = res_mask[in_edge]
+    # transmitter-side reserve gather: row lookups within each client's slot
+    flat_idx = sel_idx.reshape(n, k * r)
+    res_data = jnp.take_along_axis(
+        data, flat_idx.reshape((n, k * r) + (1,) * (data.ndim - 2)), axis=1)
+    # receiver-side gather along the client axis (the D2D transfer)
+    cand = sh.constrain_clients(jnp.take(res_data, in_edge, axis=0), rules)
+    cand = cand.reshape((n, k, r) + data.shape[2:])
+    cand_mask = sh.constrain_clients(
+        jnp.take(sel_mask, in_edge, axis=0), rules)
 
-    allowed = np.zeros((n, k_max), bool)
-    for i in range(n):
-        j = int(in_edge[i])
-        if j == i:
-            continue
-        allowed[i, :trust_np[j].shape[1]] = trust_np[j][i] != 0
+    # trust gate, receiver-aligned: allowed[i, m] = T_{in_edge[i]}[i, m]
+    trust_rx = jnp.swapaxes(trust_s, 0, 1)              # (N_rx, N_tx, K)
+    allowed = jnp.take_along_axis(
+        trust_rx, in_edge[:, None, None], axis=1)[:, 0] != 0
+    allowed &= (in_edge != jnp.arange(n))[:, None]
     allowed &= cand_mask.any(-1)
 
-    own, sizes = batching.stack_clients(data_np, rules)
-    own_mask = batching.valid_mask(sizes, own.shape[1], rules=rules)
-    cand, cand_mask, allowed, fail_u, p_fail, in_edge = sh.shard_clients(
-        (cand, cand_mask, allowed, fail_u, p_fail, in_edge), rules)
-    return own, own_mask, cand, cand_mask, allowed, fail_u, p_fail, in_edge
+    base, scores, fail, accept = _gate_scores(
+        params, data, own_mask, cand, cand_mask, allowed, fail_u, p_fail,
+        in_edge, ae_cfg, apply_channel, rules)
+
+    # capacity-masked scatter: compact kept rows to sizes[i] + offset
+    keep = (accept[:, :, None] & (cand_mask > 0)).reshape(n, k * r)
+    dest = sizes[:, None] + jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1
+    moved_full = jnp.sum(keep, axis=1, dtype=jnp.int32)
+    if out_cap > cap:
+        pad = [(0, 0), (0, out_cap - cap)] + [(0, 0)] * (data.ndim - 2)
+        data = jnp.pad(data, pad)
+        if labels is not None:
+            labels = jnp.pad(labels, pad[:2])
+    rows = jnp.arange(n)[:, None]
+    dest_safe = jnp.where(keep & (dest < out_cap), dest, out_cap)
+    cand_flat = cand.reshape((n, k * r) + data.shape[2:])
+    new_data = sh.constrain_clients(
+        data.at[rows, dest_safe].set(cand_flat, mode="drop"), rules)
+    new_labels = None
+    if labels is not None:
+        lab_res = jnp.take_along_axis(labels[:, :cap], flat_idx, axis=1)
+        cand_lab = jnp.take(lab_res, in_edge, axis=0)
+        new_labels = sh.constrain_clients(
+            labels.at[rows, dest_safe].set(cand_lab, mode="drop"), rules)
+    new_sizes = jnp.minimum(sizes + moved_full, out_cap)
+    moved = new_sizes - sizes
+    overflowed = jnp.any(sizes + moved_full > out_cap)
+    return (ClientData(new_data, new_sizes, new_labels), moved, base,
+            scores, fail, accept, overflowed)
 
 
-def _gate_batched(datasets, labels, trust, in_edge, sel, fail_u, p_fail,
+def _gate_batched(cd: ClientData, trust, in_edge, sel, fail_u, p_fail,
                   params, ae_cfg, cfg: ExchangeConfig,
                   rules: sh.ShardingRules | None = None) -> ExchangeResult:
-    n = len(datasets)
-    data_np = [np.asarray(d) for d in datasets]
-    labels_np = [np.asarray(l) for l in labels]
+    n, cap = cd.n_clients, cd.cap
     trust_np = [np.asarray(t) for t in trust]
+    k_max = max(t.shape[1] for t in trust_np)
+    sel_idx, sel_mask = _sel_tensors(sel, n, k_max, cfg.reserve_per_cluster)
+    trust_s = _stack_trust_padded(trust_np, n, k_max)
 
-    (own, own_mask, cand, cand_mask, allowed, fail_u_d, p_fail_d,
-     in_edge_d) = _assemble_gate_inputs(data_np, trust_np, in_edge, sel,
-                                        fail_u, p_fail,
-                                        cfg.reserve_per_cluster, rules)
-    _, _, fail, accept = _gate_scores(
-        params, own, own_mask, cand, cand_mask, allowed, fail_u_d, p_fail_d,
-        in_edge_d, ae_cfg, cfg.apply_channel_failure, rules)
-    in_edge = np.asarray(in_edge)
-    fail = np.asarray(fail)
-    accept = np.asarray(accept)
+    if cfg.overflow == "grow":
+        # static headroom: the largest reserve payload any transmitter
+        # offers this round (host-known — indices only, no data)
+        out_cap = cap + int(sel_mask.sum(axis=(1, 2)).max(initial=0))
+    else:
+        out_cap = cap
 
-    # host: ragged concat of accepted subsets, decisions in loop-plane order
-    new_data = list(data_np)
-    new_labels = list(labels_np)
-    moved = np.zeros(n, np.int64)
-    decisions = []
-    for i in range(n):
-        j = int(in_edge[i])
-        if j == i:
-            continue
-        if cfg.apply_channel_failure and fail[i]:
-            decisions.append((i, j, -1, False))
-            continue
-        for m in range(trust_np[j].shape[1]):
-            if int(trust_np[j][i, m]) == 0:
-                continue
-            idx = sel[j][m]
-            if idx.size == 0:
-                continue
-            acc = bool(accept[i, m])
-            decisions.append((i, j, m, acc))
-            if acc:
-                new_data[i] = np.concatenate([new_data[i], data_np[j][idx]])
-                new_labels[i] = np.concatenate(
-                    [new_labels[i], labels_np[j][idx]])
-                moved[i] += idx.size
-    return ExchangeResult([jnp.asarray(d) for d in new_data],
-                          [jnp.asarray(l) for l in new_labels],
-                          moved, decisions)
+    sel_idx_d, sel_mask_d, trust_d = sh.shard_clients(
+        (jnp.asarray(sel_idx), jnp.asarray(sel_mask), jnp.asarray(trust_s)),
+        rules)
+    new_cd, moved, _base, _scores, fail, accept, overflowed = \
+        _exchange_device(ae_cfg, cfg.apply_channel_failure, out_cap, rules,
+                         params, cd.data, cd.sizes, cd.labels, sel_idx_d,
+                         sel_mask_d, trust_d, fail_u, p_fail, in_edge)
+    if cfg.overflow == "error" and bool(overflowed):
+        raise ValueError(
+            "exchange overflow: accepted transfers exceed the ClientData "
+            f"cap ({cap}); raise the cap or use overflow='grow'/'drop'")
+    return ExchangeResult(new_cd, moved, fail, accept,
+                          _ctx=(trust_np, sel, in_edge,
+                                cfg.apply_channel_failure))
 
 
 # ---------------------------------------------------------------------------
@@ -339,35 +444,52 @@ def run_exchange(key, datasets, labels, assignments, trust, in_edge, p_fail,
                  rules: sh.ShardingRules | None = None) -> ExchangeResult:
     """Execute Algorithm 2's data-plane step over the discovered graph.
 
-    datasets/labels: per-client arrays; assignments: per-client (n_i,)
-    cluster ids from K-means; in_edge: (N,) transmitter for each receiver.
-    ``method`` (default ``cfg.method``) picks the data plane — see the
-    module docstring.  ``ae_params`` may be a per-client list or a stacked
-    pytree; omitted, it is pretrained here from the exchange key.
-    ``rules`` shards the batched plane's client axis over the mesh (ignored
-    by the reference loop plane); mesh=1 placement is bit-identical to the
-    unsharded program.
+    datasets/labels: ragged per-client lists, or one :class:`ClientData` as
+    ``datasets`` (then ``labels`` must be None — the stack carries them);
+    the list form converts exactly once.  assignments: per-client (n_i,)
+    cluster ids from K-means, or the stacked (N, cap) form; in_edge: (N,)
+    transmitter for each receiver.  ``method`` (default ``cfg.method``)
+    picks the data plane — see the module docstring.  ``ae_params`` may be
+    a per-client list or a stacked pytree; omitted, it is pretrained here
+    from the exchange key.  ``rules`` shards the batched plane's client
+    axis over the mesh (ignored by the reference loop plane); mesh=1
+    placement is bit-identical to the unsharded program.
     """
     method = (method or cfg.method).lower()
-    n = len(datasets)
+    if cfg.overflow not in OVERFLOW_POLICIES:
+        raise ValueError(f"unknown overflow policy {cfg.overflow!r}; "
+                         f"expected one of {OVERFLOW_POLICIES}")
+    if method == "loop" and cfg.overflow != "grow":
+        raise ValueError(
+            "the loop plane only implements the 'grow' semantics (its "
+            "ragged concat has no capacity); use the batched plane for "
+            f"overflow={cfg.overflow!r}")
+    cd = as_client_data(datasets, labels, rules=rules)
+    n = cd.n_clients
     k_pre, k_sel, k_ch = jax.random.split(key, 3)
     sel = _select_reserves(k_sel, assignments,
                            [t.shape[1] for t in trust],
-                           cfg.reserve_per_cluster)
-    fail_u = np.asarray(jax.random.uniform(k_ch, (n,)), np.float32)
+                           cfg.reserve_per_cluster, sizes=cd.sizes)
+    fail_u = jax.random.uniform(k_ch, (n,))
 
     if method == "loop":
+        data_l = cd.data_list()
+        labels_l = cd.label_list()
+        if labels_l is None:
+            raise ValueError("the loop plane needs labels; pass them (the "
+                             "batched plane accepts unlabeled ClientData)")
         params = ae_params if ae_params is not None else \
-            pretrain_autoencoders(k_pre, datasets, ae_cfg, cfg)
+            pretrain_autoencoders(k_pre, data_l, ae_cfg, cfg)
         if not isinstance(params, (list, tuple)):
             params = batching.unstack_pytree(params, n)
-        return _gate_loop(datasets, labels, trust, in_edge, sel, fail_u,
-                          p_fail, list(params), ae_cfg, cfg)
+        return _gate_loop(data_l, labels_l, trust, in_edge, sel,
+                          np.asarray(fail_u, np.float32), p_fail,
+                          list(params), ae_cfg, cfg)
     if method != "batched":
         raise ValueError(f"unknown exchange method: {method!r}")
     params = ae_params if ae_params is not None else \
-        pretrain_autoencoders_batched(k_pre, datasets, ae_cfg, cfg, rules)
+        pretrain_autoencoders_batched(k_pre, cd, ae_cfg, cfg, rules)
     if isinstance(params, (list, tuple)):
         params = batching.stack_pytrees(list(params), rules)
-    return _gate_batched(datasets, labels, trust, in_edge, sel, fail_u,
-                         p_fail, params, ae_cfg, cfg, rules)
+    return _gate_batched(cd, trust, in_edge, sel, fail_u, p_fail,
+                         params, ae_cfg, cfg, rules)

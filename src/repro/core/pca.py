@@ -1,20 +1,30 @@
 """PCA (paper Sec. III): dimensionality reduction before K-means++.
 
-Two fits:
+Three fits:
   * :func:`fit_pca` — single dataset (covariance + eigh).
-  * :func:`fit_pca_federated` — the FL-compatible variant used by the
-    pipeline: clients share only their first/second moment sufficient
-    statistics (sum x, sum x x^T, n); the *shared* basis makes centroids of
-    different clients live in one space, which the paper's lambda_ij
-    comparison implicitly requires.  No raw datapoint leaves a device,
-    consistent with the paper's privacy constraints.
+  * :func:`fit_pca_federated` — the FL-compatible variant: clients share
+    only their first/second moment sufficient statistics (sum x, sum x x^T,
+    n); the *shared* basis makes centroids of different clients live in one
+    space, which the paper's lambda_ij comparison implicitly requires.  No
+    raw datapoint leaves a device, consistent with the paper's privacy
+    constraints.
+  * :func:`fit_pca_federated_stacked` — the pipeline's hot path since the
+    array-first refactor: the same moment aggregation over a mask-padded
+    ``(N, cap, d)`` client stack.  Per-client moments are masked gemms
+    (shard-local on a CLIENTS mesh); the aggregation is one
+    ``sharding.client_sum`` collective — per-shard partial sums + an
+    all-reduce, exactly the communication pattern of the real federated
+    fit.  The per-client moment map (:func:`client_moments`) is shared with
+    the list variant so the two paths are the same math vmapped vs looped.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro import sharding as sh
 
 
 class PCA(NamedTuple):
@@ -45,9 +55,40 @@ def fit_pca(x, n_components: int) -> PCA:
     return _pca_from_moments(s1, s2, n, n_components)
 
 
+def client_moments(x, mask):
+    """One client's (sum x, sum x x^T) over its valid rows.
+
+    x: (cap, d) padded samples; mask: (cap,) {0,1}.  Both moments are gemm
+    formulations (``mask @ x`` and ``xm.T @ xm``) rather than ``jnp.sum``
+    reductions: appended zero rows then leave the accumulation order of the
+    real rows untouched, so the padded stack reproduces the unpadded moments
+    bit-for-bit — the property the stacked/loop clustering parity tests
+    (``tests/test_client_data.py``) pin down.
+    """
+    xm = x * mask[:, None]
+    return mask @ x, xm.T @ xm
+
+
 def fit_pca_federated(xs: Sequence[jax.Array], n_components: int) -> PCA:
     """Aggregate per-client sufficient statistics into one shared basis."""
     s1 = sum(jnp.sum(x, axis=0) for x in xs)
     s2 = sum(x.T @ x for x in xs)
     n = sum(x.shape[0] for x in xs)
+    return _pca_from_moments(s1, s2, n, n_components)
+
+
+def fit_pca_federated_stacked(x, mask, n_components: int,
+                              rules: Optional[sh.ShardingRules] = None
+                              ) -> PCA:
+    """Shared basis from a mask-padded client stack, in one device program.
+
+    x: (N, cap, d) flattened client stack; mask: (N, cap) validity.  The
+    vmapped :func:`client_moments` stay shard-local under ``rules``; the
+    only cross-client communication is the ``client_sum`` all-reduce of the
+    (d,)/(d, d) statistics — no raw datapoint crosses shards.
+    """
+    s1c, s2c = jax.vmap(client_moments)(x, mask)
+    s1 = sh.client_sum(s1c, rules)
+    s2 = sh.client_sum(s2c, rules)
+    n = jnp.sum(mask)
     return _pca_from_moments(s1, s2, n, n_components)

@@ -74,6 +74,20 @@ def delivery_stats_dev(in_edge, p_fail):
     return pf, expected
 
 
+def realized_delivery_dev(in_edge, fail):
+    """:func:`realized_delivery` from the batched exchange's device outputs
+    (``ExchangeResult.fail``) — no gate-decision materialisation, no host
+    sync; NaN when no link is live (the caller maps that to None)."""
+    import jax.numpy as jnp
+    in_edge = jnp.asarray(in_edge)
+    n = in_edge.shape[0]
+    live = in_edge != jnp.arange(n)
+    n_live = jnp.sum(live)
+    failed = jnp.sum(jnp.asarray(fail) & live)
+    return jnp.where(n_live > 0,
+                     1.0 - failed / jnp.maximum(n_live, 1), jnp.nan)
+
+
 def realized_delivery(in_edge, decisions) -> Optional[float]:
     """Fraction of live links that delivered, from the exchange's
     ``gate_decisions`` — entries ``(rx, tx, cluster, accepted)`` with

@@ -23,14 +23,20 @@ Three modes, matching the benchmark baselines:
                 the ablation separating "any re-exchange helps" from
                 "RL-chosen links help".
 
-Device residency: channel state (``EnvState``), the FL carry, the graph and
-availability masks stay on device across segments; per-segment metrics
-(eval loss, churn, delivery, availability) are accumulated as *deferred*
-device scalars and materialised in a single transfer after the last segment
-— the only host round-trips inside the loop are the exchange's inherently
-ragged reserve assembly on re-discovery segments.  Pass ``rules`` to shard
-every client-stacked tensor (FL carry, exchange stacks, and the RL bursts'
-agent-major Q-tables/buffers) over the mesh.
+Device residency: the client datasets themselves now live on device as one
+:class:`~repro.core.batching.ClientData` stack threaded across segments —
+re-clustering is a jitted stacked program (``cluster_clients``), the
+re-exchange gathers reserves and scatters accepted subsets inside one
+device program, and the FL segments consume the stack directly.  Channel
+state (``EnvState``), the FL carry, the graph and availability masks stay
+on device too; per-segment metrics (eval loss, churn, delivery, moved
+counts, availability) are accumulated as *deferred* device scalars and
+materialised in a single transfer after the last segment.  The only
+per-segment host work left is deriving reserve *indices* (a few ints per
+cluster) — no client datapoint crosses to the host inside the loop.  Pass
+``rules`` to shard every client-stacked tensor (the data stack, FL carry,
+clustering/exchange programs, and the RL bursts' agent-major
+Q-tables/buffers) over the mesh.
 
 Determinism contract (tested in ``tests/test_dynamics_parity.py``): under
 the ``static`` scenario with mode ``"oneshot"``, the run is bit-for-bit
@@ -46,17 +52,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dissimilarity as ds
 from repro.core import exchange as ex
 from repro.core import qlearning as ql
-from repro.core import rewards as rw
 from repro.core.channel import failure_prob
 from repro.core.pipeline import (PipelineConfig, cluster_clients,
-                                 run_pipeline, split_pipeline_keys)
+                                 link_rewards, run_pipeline,
+                                 split_pipeline_keys)
 from repro.dynamics.environment import env_init, env_step
 from repro.dynamics.metrics import (SegmentRecord, Trace,
                                     delivery_stats_dev, link_churn_dev,
-                                    realized_delivery)
+                                    realized_delivery, realized_delivery_dev)
 from repro.dynamics.scenarios import get_scenario
 from repro.fl.trainer import FLConfig, eval_global_loss, fl_train
 
@@ -92,26 +97,27 @@ class OrchestratorResult(NamedTuple):
     labels: list
     eval_iters: np.ndarray         # concatenated fl_train eval schedule
     eval_loss: np.ndarray
+    client_data: object = None     # the final device-resident ClientData
 
 
-def _rediscover(key, data, trust, p_fail, cfg: OrchestratorConfig,
+def _rediscover(key, cd, trust, p_fail, cfg: OrchestratorConfig,
                 rl_state: Optional[ql.RLState], rules=None):
-    """Re-cluster the *current* datasets and run a warm-started RL burst
-    (or a uniform re-draw).  Returns (in_edge, rl_state, assigns).
+    """Re-cluster the *current* ClientData stack and run a warm-started RL
+    burst (or a uniform re-draw).  Returns (in_edge, rl_state, assigns).
 
-    ``rules`` shards the burst's agent axis; a warm-start ``rl_state`` from
-    a previous sharded burst is already mesh-placed and stays device-
-    resident across segments (re-placement inside ``discover_graph`` is a
-    no-op)."""
+    Re-clustering is the jitted stacked program (``cluster_clients`` fits a
+    fresh federated PCA basis + per-client K-means on device); the reward
+    map is the shared ``link_rewards`` helper — the same code path
+    ``run_pipeline`` uses, so the two call sites cannot drift.  ``rules``
+    shards the burst's agent axis; a warm-start ``rl_state`` from a
+    previous sharded burst is already mesh-placed and stays device-resident
+    across segments (re-placement inside ``discover_graph`` is a no-op)."""
     k_cl, k_rl = jax.random.split(key)
     pcfg = cfg.pipeline
-    _, cents, assigns = cluster_clients(k_cl, data, pcfg)
+    _, cents, assigns = cluster_clients(k_cl, cd, pcfg, rules=rules)
     if cfg.mode == "uniform":
-        return ql.uniform_graph(k_rl, len(data)), rl_state, assigns
-    beta = pcfg.beta if pcfg.beta is not None else \
-        ds.median_heuristic_beta(cents, pcfg.beta_scale)
-    lam = ds.lambda_matrix(cents, trust, beta)
-    local_r = rw.local_reward_matrix(lam, p_fail, pcfg.reward)
+        return ql.uniform_graph(k_rl, cd.n_clients), rl_state, assigns
+    _beta, _lam, local_r = link_rewards(cents, trust, p_fail, pcfg)
     graph = ql.discover_graph(k_rl, local_r, p_fail, pcfg.rl,
                               init_state=rl_state,
                               n_episodes=cfg.burst_episodes, rules=rules)
@@ -123,8 +129,8 @@ class _PendingSegment(NamedTuple):
     device scalars/arrays, the rest is host metadata known synchronously."""
     segment: int
     rediscovered: bool
-    moved: int
-    realized_delivery: Optional[float]
+    sampled: bool                  # did the exchange sample the channel?
+    host_realized: Optional[float]  # loop-plane fallback (already host)
     eval_iters: np.ndarray
     dev: dict
 
@@ -134,7 +140,11 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
                      scenario="static", eval_data=None,
                      rules=None) -> OrchestratorResult:
     """Simulate a deployment: ``cfg.n_segments`` FL segments over an
-    evolving environment (see module docstring for the protocol)."""
+    evolving environment (see module docstring for the protocol).
+
+    ``datasets``/``labels`` may be ragged per-client lists or one
+    :class:`~repro.core.batching.ClientData` (as ``datasets``, with
+    ``labels=None``)."""
     if cfg.mode not in MODES:
         raise ValueError(f"unknown mode {cfg.mode!r}; expected one of {MODES}")
     if eval_data is None:
@@ -149,7 +159,8 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
             "windows)")
     scn = get_scenario(scenario)
     k_pipe, k_env, k_fl = jax.random.split(key, 3)
-    n = len(datasets)
+    n = len(datasets) if isinstance(datasets, (list, tuple)) else \
+        datasets.n_clients
     pcfg = cfg.pipeline
     flcfg = dataclasses.replace(cfg.fl, total_iters=cfg.total_iters)
 
@@ -164,13 +175,12 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
     pipe = run_pipeline(k_pipe, datasets, labels, ae_cfg, pcfg,
                         in_edge=init_edge, rss=env.rss, rules=rules)
 
-    data, labels = pipe.datasets, pipe.labels
+    cd = pipe.client_data          # the device-resident client plane
     trust = pipe.trust
     in_edge = pipe.in_edge
     rl_state = pipe.graph.state
     p_fail = pipe.p_fail
-    decisions = pipe.exchange.gate_decisions
-    moved = int(np.asarray(pipe.moved_counts).sum())
+    exch = pipe.exchange
 
     pending: list[_PendingSegment] = []
     carry = None
@@ -181,37 +191,44 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
             env = env_step(jax.random.fold_in(k_env, s), env, scn,
                            pcfg.channel)
             p_fail = failure_prob(env.rss, pcfg.channel)
-            decisions, moved = None, 0
+            exch = None
             if cfg.mode != "oneshot" and s % cfg.rediscover_every == 0:
                 new_edge, rl_state, assigns = _rediscover(
-                    jax.random.fold_in(k_pipe, 100 + s), data,
+                    jax.random.fold_in(k_pipe, 100 + s), cd,
                     trust, p_fail, cfg, rl_state, rules=rules)
                 if cfg.exchange_on_rediscover:
-                    res = ex.run_exchange(
-                        jax.random.fold_in(k_pipe, 200 + s), data, labels,
+                    exch = ex.run_exchange(
+                        jax.random.fold_in(k_pipe, 200 + s), cd, None,
                         assigns, trust, new_edge, p_fail, ae_cfg,
                         pcfg.exchange, rules=rules)
-                    data, labels = res.datasets, res.labels
-                    decisions = res.gate_decisions
-                    moved = int(np.asarray(res.moved_counts).sum())
+                    cd = exch.client_data
                 prev_edge, in_edge = in_edge, new_edge
                 rediscovered = True
 
-        fl = fl_train(k_fl, data, ae_cfg, flcfg, eval_data,
+        fl = fl_train(k_fl, cd, ae_cfg, flcfg, eval_data,
                       avail_mask=env.available, init_carry=carry,
                       start_iter=s * cfg.iters_per_segment,
                       stop_iter=(s + 1) * cfg.iters_per_segment,
                       rules=rules, defer_metrics=True)
         carry = fl.carry
 
-        sampled = pcfg.exchange.apply_channel_failure and rediscovered
-        realized = realized_delivery(in_edge, decisions) if sampled else None
+        sampled = (pcfg.exchange.apply_channel_failure and rediscovered
+                   and exch is not None)
+        realized_dev = jnp.nan
+        host_realized = None
+        if sampled:
+            if exch.fail is not None:       # batched plane: stay on device
+                realized_dev = realized_delivery_dev(in_edge, exch.fail)
+            else:                           # loop plane: host decisions
+                host_realized = realized_delivery(in_edge,
+                                                  exch.gate_decisions)
         pf_dev, expected_dev = delivery_stats_dev(in_edge, p_fail)
         seg_loss = (fl.eval_loss[-1] if fl.eval_loss.size else
                     eval_global_loss(carry.global_params, eval_data, ae_cfg))
         pending.append(_PendingSegment(
-            segment=s, rediscovered=rediscovered, moved=moved,
-            realized_delivery=realized, eval_iters=np.asarray(fl.eval_iters),
+            segment=s, rediscovered=rediscovered, sampled=sampled,
+            host_realized=host_realized,
+            eval_iters=np.asarray(fl.eval_iters),
             dev={
                 "eval_loss": seg_loss,
                 "in_edge": jnp.asarray(in_edge),
@@ -220,26 +237,33 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
                 "mean_pfail": pf_dev,
                 "expected_delivery": expected_dev,
                 "n_available": jnp.sum(env.available),
+                "moved": (jnp.sum(exch.moved_dev)
+                          if exch is not None else jnp.zeros((), jnp.int32)),
+                "realized": realized_dev,
                 "eval_curve": fl.eval_loss,
             }))
 
     # One host transfer for every per-segment metric of the whole run: the
-    # loop above never blocked on a device value (sans exchange host work).
+    # loop above never blocked on a device value.
     host = jax.device_get([p.dev for p in pending])
     trace = Trace()
     for p, h in zip(pending, host):
+        realized = p.host_realized
+        if realized is None and p.sampled and np.isfinite(h["realized"]):
+            realized = float(h["realized"])
         trace.add(SegmentRecord(
             segment=p.segment, eval_loss=float(h["eval_loss"]),
             in_edge=np.asarray(h["in_edge"]),
             link_churn=float(h["link_churn"]),
             mean_pfail=float(h["mean_pfail"]),
             expected_delivery=float(h["expected_delivery"]),
-            realized_delivery=p.realized_delivery,
+            realized_delivery=realized,
             n_available=int(h["n_available"]),
-            moved=p.moved, rediscovered=p.rediscovered,
+            moved=int(h["moved"]), rediscovered=p.rediscovered,
             eval_iters=p.eval_iters,
             eval_curve=np.asarray(h["eval_curve"])))
 
     return OrchestratorResult(trace, carry.global_params, carry, in_edge,
-                              env, data, labels, trace.eval_curve_iters,
-                              trace.eval_curve)
+                              env, cd.data_list(), cd.label_list(),
+                              trace.eval_curve_iters, trace.eval_curve,
+                              cd)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import sharding as sh
-from repro.core.batching import stack_clients  # noqa: F401  (re-exported)
+from repro.core.batching import as_client_data, stack_clients  # noqa: F401
 from repro.models import autoencoder as ae
 
 
@@ -187,7 +187,12 @@ def fl_train(key, datasets, ae_cfg: ae.AEConfig, cfg: FLConfig,
              start_iter: int = 0, stop_iter: Optional[int] = None,
              rules: Optional[sh.ShardingRules] = None,
              avail_mask=None, defer_metrics: bool = False) -> FLResult:
-    """Run the FL task. datasets: per-client image arrays.
+    """Run the FL task. datasets: per-client image arrays, or one
+    :class:`~repro.core.batching.ClientData` stack (the orchestrator's form
+    — already padded and mesh-placed, so no re-stacking happens here; local
+    minibatches sample indices in [0, size_i), so a stack whose padding
+    rows were overwritten by an exchange scatter trains identically to the
+    freshly tiled list conversion).
 
     eval_data: (n_eval, H, W, C) held-out set for the global recon loss.
 
@@ -207,8 +212,9 @@ def fl_train(key, datasets, ae_cfg: ae.AEConfig, cfg: FLConfig,
     host round-trip.  ``defer_metrics`` leaves ``eval_loss`` as a device
     array so a caller looping over segments can materialise all metrics in
     one transfer at the end of the run."""
-    n = len(datasets)
-    data, sizes = stack_clients(datasets, rules)
+    cd = as_client_data(datasets, rules=rules)
+    n = cd.n_clients
+    data, sizes = cd.data, cd.sizes
     if avail_mask is not None:
         agg_mask = jnp.asarray(avail_mask, jnp.float32)
     else:

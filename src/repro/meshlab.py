@@ -1,6 +1,6 @@
 """Mesh lab: a deterministic client world + the client-stacked hot paths
-(AE pretraining, exchange-gate scoring, FL rounds, RL graph discovery)
-runnable with or without :class:`~repro.sharding.ShardingRules`.
+(clustering, AE pretraining, exchange-gate scoring, FL rounds, RL graph
+discovery) runnable with or without :class:`~repro.sharding.ShardingRules`.
 
 Shared by ``benchmarks/shard_scaling.py`` and the multi-device parity tests
 (``tests/test_mesh_parity.py``): both spawn children under
@@ -28,6 +28,9 @@ from repro.core import exchange as ex
 from repro.core import qlearning as ql
 from repro.core import rewards as rw
 from repro.core import trust as tr
+from repro.core.batching import as_client_data
+from repro.core.pipeline import (PipelineConfig, cluster_clients,
+                                 cluster_clients_loop)
 from repro.core.qlearning import uniform_graph
 from repro.fl.trainer import FLConfig, fl_train
 from repro.models.autoencoder import AEConfig
@@ -65,17 +68,22 @@ def make_rules(mesh_size: int | None) -> sh.ShardingRules | None:
 
 def build_world(cfg: LabConfig) -> dict:
     """Datasets, cluster assignments, trust, graph and channel for N
-    clients — everything the exchange gate and the FL trainer consume."""
+    clients — everything the exchange gate and the FL trainer consume.
+
+    Client sizes are *ragged* (n_per_client minus a per-client offset) so
+    every stacked program exercises the mask-padded plane, not just the
+    trivially rectangular case."""
     key = jax.random.PRNGKey(cfg.seed)
     k_data, k_assign, k_tr, k_ch, k_g, k_ex, k_fl = jax.random.split(key, 7)
     n = cfg.n_clients
+    sizes = [max(cfg.n_per_client - 3 * (i % 4), 4) for i in range(n)]
     datasets = [
         jax.random.uniform(jax.random.fold_in(k_data, i),
-                           (cfg.n_per_client, cfg.hw, cfg.hw, 1))
+                           (sizes[i], cfg.hw, cfg.hw, 1))
         for i in range(n)]
     assignments = [
         jax.random.randint(jax.random.fold_in(k_assign, i),
-                           (cfg.n_per_client,), 0, cfg.n_clusters)
+                           (sizes[i],), 0, cfg.n_clusters)
         for i in range(n)]
     trust = tr.make_trust(k_tr, n, cfg.n_clusters, 0.9)
     rss = ch.make_rss(k_ch, n)
@@ -92,7 +100,37 @@ def build_world(cfg: LabConfig) -> dict:
             "trust": trust, "p_fail": p_fail, "in_edge": in_edge,
             "eval_data": eval_data, "local_r": local_r,
             "k_ex": k_ex, "k_fl": k_fl,
-            "k_rl": jax.random.fold_in(key, 101)}
+            "k_rl": jax.random.fold_in(key, 101),
+            "k_cl": jax.random.fold_in(key, 102),
+            "cluster_data": _cluster_world(jax.random.fold_in(key, 103),
+                                           cfg, sizes)}
+
+
+def _cluster_world(key, cfg: LabConfig, sizes) -> list:
+    """Structured (blobby) ragged datasets for the clustering programs.
+
+    The cluster parity contract at mesh>1 is a <=1e-6 centroid drift under
+    the PCA moment all-reduce's float reassociation.  That bound is only
+    meaningful on data whose covariance has healthy eigengaps: pure uniform
+    noise (the gate/FL world) has a near-degenerate spectrum whose eigh
+    basis rotates wholesale under 1e-7 moment perturbations.  Six shared
+    prototype patterns + small noise give a rank-5 between-proto scatter
+    with generically separated eigenvalues, so the retained basis — and
+    everything downstream of it — is stable under the collective.  Samples
+    are scaled to ~unit flattened norm: the reassociation drift in the
+    basis projection is relative (~1e-7 of the sample norm), so unit scale
+    is what makes the absolute <=1e-6 centroid bound the tight, meaningful
+    statement of that contract."""
+    scale = 1.0 / cfg.hw
+    protos = jax.random.normal(jax.random.fold_in(key, 0),
+                               (6, cfg.hw, cfg.hw, 1)) * scale
+    out = []
+    for i, s in enumerate(sizes):
+        ids = jax.random.randint(jax.random.fold_in(key, 1 + i), (s,), 0, 6)
+        noise = jax.random.normal(jax.random.fold_in(key, 100 + i),
+                                  (s, cfg.hw, cfg.hw, 1))
+        out.append(protos[ids] + 0.05 * scale * noise)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -108,25 +146,39 @@ def run_pretrain(world, rules):
 
 
 def gate_operands(world, rules):
-    """Assemble the gate engine's device operands once (host-side work)."""
+    """Assemble the exchange program's operands once (host-side work is
+    index-only: reserve indices, the stacked trust tensor and the placed
+    ClientData)."""
     cfg: LabConfig = world["cfg"]
     n = cfg.n_clients
     _k_pre, k_sel, k_ch = jax.random.split(world["k_ex"], 3)
-    sel = ex._select_reserves(k_sel, world["assignments"],
-                              [t.shape[1] for t in world["trust"]],
-                              cfg.reserve)
-    fail_u = np.asarray(jax.random.uniform(k_ch, (n,)), np.float32)
-    data_np = [np.asarray(d) for d in world["datasets"]]
     trust_np = [np.asarray(t) for t in world["trust"]]
-    return ex._assemble_gate_inputs(
-        data_np, trust_np, world["in_edge"], sel, fail_u,
-        world["p_fail"], cfg.reserve, rules)
+    k_max = max(t.shape[1] for t in trust_np)
+    sel = ex._select_reserves(k_sel, world["assignments"],
+                              [t.shape[1] for t in trust_np], cfg.reserve)
+    sel_idx, sel_mask = ex._sel_tensors(sel, n, k_max, cfg.reserve)
+    trust_s = ex._stack_trust_padded(trust_np, n, k_max)
+    fail_u = jax.random.uniform(k_ch, (n,))
+    cd = as_client_data(world["datasets"], rules=rules)
+    # grow-policy headroom, from the host mask *before* placement (same
+    # formula as _gate_batched)
+    out_cap = cd.cap + int(sel_mask.sum(axis=(1, 2)).max(initial=0))
+    sel_idx, sel_mask, trust_s, fail_u, in_edge = sh.shard_clients(
+        (jnp.asarray(sel_idx), jnp.asarray(sel_mask), jnp.asarray(trust_s),
+         fail_u, jnp.asarray(world["in_edge"])), rules)
+    return (cd, sel_idx, sel_mask, trust_s, fail_u, in_edge, out_cap)
 
 
 def run_gate(world, params, operands, rules):
-    """One jitted gate-scoring call: (base, scores, fail, accept)."""
+    """One jitted exchange program (gather reserves -> score the gate ->
+    scatter accepted rows): returns (new ClientData, moved, base, scores,
+    fail, accept, overflowed)."""
     cfg: LabConfig = world["cfg"]
-    return ex._gate_scores(params, *operands, cfg.ae_cfg, False, rules)
+    cd, sel_idx, sel_mask, trust_s, fail_u, in_edge, out_cap = operands
+    return ex._exchange_device(cfg.ae_cfg, False, out_cap, rules, params,
+                               cd.data, cd.sizes, cd.labels, sel_idx,
+                               sel_mask, trust_s, fail_u, world["p_fail"],
+                               in_edge)
 
 
 def run_fl_segment(world, rules):
@@ -138,6 +190,34 @@ def run_fl_segment(world, rules):
     res = fl_train(world["k_fl"], world["datasets"], cfg.ae_cfg, flcfg,
                    world["eval_data"], rules=rules)
     return res.global_params, res.client_params
+
+
+def _pipe_cfg(cfg: LabConfig) -> PipelineConfig:
+    # n_pca=4 < the cluster world's rank-5 proto scatter, so every retained
+    # component sits above the noise floor (see _cluster_world)
+    return PipelineConfig(n_pca=4, n_clusters=cfg.n_clusters,
+                          kmeans_iters=10)
+
+
+def run_cluster(world, rules):
+    """The jitted stacked clustering program (masked federated PCA +
+    vmapped K-means++) on the ragged structured lab datasets.  Returns
+    (components, centroids, assignments)."""
+    cfg: LabConfig = world["cfg"]
+    pca, cents, assigns = cluster_clients(world["k_cl"],
+                                          world["cluster_data"],
+                                          _pipe_cfg(cfg), rules=rules)
+    return pca.components, cents, assigns
+
+
+def run_cluster_loop(world):
+    """The per-client host-loop reference of the same masked math — the
+    stacked program must match it bit-for-bit."""
+    cfg: LabConfig = world["cfg"]
+    pca, cents, assigns = cluster_clients_loop(world["k_cl"],
+                                               world["cluster_data"],
+                                               _pipe_cfg(cfg))
+    return pca.components, cents, assigns
 
 
 def _rl_cfg(cfg: LabConfig, policy: str, episodes=None) -> ql.RLConfig:
@@ -196,7 +276,11 @@ def parity_report(cfg: LabConfig, mesh_size: int) -> dict:
     mesh-placed warm-start state).  At mesh>1 their two collectives (the
     episode-mean reward and r_net) reassociate float sums, so — like the FL
     round — parity there is a Q-table delta plus final-edge agreement, not
-    bit equality."""
+    bit equality.  The clustering program's single collective (the PCA
+    moment ``client_sum``) reassociates the same way at mesh>1, so its
+    sharded verdict is a centroid delta + assignment agreement; at mesh=1
+    (and vs the per-client host loop, ``cluster_loop_bitwise``) it is
+    bit-identical."""
     world = build_world(cfg)
     out = {"device_count": len(jax.devices()), "mesh_size": mesh_size}
     discoveries = (("disc", lambda r: run_discovery(world, r, "mixed")),
@@ -210,21 +294,30 @@ def parity_report(cfg: LabConfig, mesh_size: int) -> dict:
         operands = gate_operands(world, rules)
         gate = run_gate(world, params, operands, rules)
         gp, cp = run_fl_segment(world, rules)
+        cluster = run_cluster(world, rules)
         graphs = {name: fn(rules) for name, fn in discoveries}
         out[f"pretrain_digest_{tag}"] = digest(params)
         out[f"gate_digest_{tag}"] = digest(gate)
         out[f"fl_digest_{tag}"] = digest((gp, cp))
+        out[f"cluster_digest_{tag}"] = digest(cluster)
         for name, g in graphs.items():
             out[f"{name}_digest_{tag}"] = digest((g.in_edge, g.state))
         if tag == "base":
             ref = {"params": params, "gate": gate, "gp": gp,
-                   "graphs": graphs}
+                   "cluster": cluster, "graphs": graphs}
+            out["cluster_loop_bitwise"] = (digest(run_cluster_loop(world))
+                                           == out["cluster_digest_base"])
         else:
             out[f"pretrain_maxdiff_{tag}"] = max_abs_diff(ref["params"],
                                                           params)
-            out[f"gate_maxdiff_{tag}"] = max_abs_diff(ref["gate"][:2],
-                                                      gate[:2])
+            out[f"gate_maxdiff_{tag}"] = max_abs_diff(ref["gate"][2:4],
+                                                      gate[2:4])
             out[f"fl_maxdiff_{tag}"] = max_abs_diff(ref["gp"], gp)
+            out[f"cluster_cents_maxdiff_{tag}"] = float(
+                jnp.max(jnp.abs(ref["cluster"][1] - cluster[1])))
+            out[f"cluster_assign_agree_{tag}"] = int(
+                jnp.sum(ref["cluster"][2] == cluster[2]))
+            out[f"cluster_assign_total_{tag}"] = int(cluster[2].size)
             for name, g in graphs.items():
                 rg = ref["graphs"][name]
                 out[f"{name}_q_maxdiff_{tag}"] = float(
@@ -265,12 +358,18 @@ def timing_report(cfg: LabConfig, mesh_size: int | None,
     disc_us = time_path(lambda: run_discovery(world, rules),
                         iters=max(iters // 2, 2))
 
+    # Clustering: the jitted stacked program (the re-discovery segment's
+    # first stage — previously a host-side per-client loop)
+    cluster_us = time_path(lambda: run_cluster(world, rules), iters=iters)
+
     return {"device_count": len(jax.devices()),
             "mesh_size": 0 if mesh_size is None else mesh_size,
             "n_clients": cfg.n_clients,
             "gate_us": gate_us, "fl_segment_us": fl_us,
             "disc_us": disc_us, "rl_episodes": cfg.rl_episodes,
+            "cluster_us": cluster_us,
             "gate_us_per_client": gate_us / cfg.n_clients,
             "fl_us_per_client": fl_us / cfg.n_clients,
+            "cluster_us_per_client": cluster_us / cfg.n_clients,
             "disc_us_per_agent_episode":
                 disc_us / (cfg.n_clients * cfg.rl_episodes)}

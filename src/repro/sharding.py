@@ -188,6 +188,19 @@ def constrain_clients(tree, rules: ShardingRules | None):
         lambda x: constrain(x, rules, client_axes(x.ndim)), tree)
 
 
+def client_sum(x, rules: ShardingRules | None):
+    """Sum over the leading (possibly sharded) client axis with the result
+    constrained replicated — the moment-aggregation collective of the
+    stacked federated PCA (``core/pca.py``): per-shard partial sums of the
+    first/second-moment sufficient statistics followed by a psum-style
+    all-reduce, which is the only cross-client communication the shared
+    basis needs.  ``rules=None`` degrades to a plain sum."""
+    s = jnp.sum(x, axis=0)
+    if rules is None:
+        return s
+    return constrain(s, rules, (None,) * s.ndim)
+
+
 def client_mean(x, rules: ShardingRules | None):
     """Mean over the leading (possibly sharded) client/agent axis, with the
     result constrained replicated — on a mesh this is *the* collective of

@@ -1,0 +1,265 @@
+"""The array-first client plane: ClientData round trips, the stacked
+clustering parity, and the exchange scatter's overflow policy.
+
+Contracts pinned here (tier-1, single device):
+
+  * ``ClientData`` <-> ragged-list conversions are bit-exact round trips
+    (data and labels), with cyclic-tiling padding and exact masks;
+  * the stacked clustering program (``cluster_clients``) is bit-identical
+    to the per-client host loop (``cluster_clients_loop``) — masked PCA
+    moments, K-means++ seeding draws and Lloyd updates all reproduce the
+    per-client math through the padding;
+  * the batched exchange's device scatter reproduces the loop plane's
+    ragged concat bit-for-bit under the default ``overflow="grow"`` policy
+    and behaves as documented at the ``cap`` boundary for "drop"/"error".
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import batching as B
+from repro.core import dissimilarity as D
+from repro.core import exchange as EX
+from repro.core import kmeans as KM
+from repro.core import pca as P
+from repro.core import trust as T
+from repro.core.pipeline import (PipelineConfig, cluster_clients,
+                                 cluster_clients_loop)
+from repro.models.autoencoder import AEConfig
+
+AE_CFG = AEConfig(16, 16, 1, widths=(4, 8), latent_dim=8)
+
+
+def _ragged_world(seed, n, lo=5, hi=40, shape=(3,)):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(lo, hi + 1, n)
+    data = [rng.standard_normal((s,) + shape).astype(np.float32)
+            for s in sizes]
+    labels = [rng.integers(0, 10, s).astype(np.int32) for s in sizes]
+    return data, labels
+
+
+# ---------------------------------------------------------------------------
+# ClientData round trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 7), seed=st.integers(0, 2**31 - 1))
+def test_client_data_round_trips_ragged_lists_bit_exactly(n, seed):
+    data, labels = _ragged_world(seed, n)
+    cd = B.client_data_from_lists(data, labels)
+    assert cd.n_clients == n and cd.cap == max(d.shape[0] for d in data)
+    for a, b in zip(data, cd.data_list()):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    for a, b in zip(labels, cd.label_list()):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+def test_client_data_padding_is_cyclic_tiling_and_mask_exact(n, seed):
+    data, _ = _ragged_world(seed, n)
+    cap = max(d.shape[0] for d in data) + 9
+    cd = B.client_data_from_lists(data, cap=cap)
+    assert cd.cap == cap
+    mask = np.asarray(cd.mask())
+    for i, d in enumerate(data):
+        s = d.shape[0]
+        np.testing.assert_array_equal(mask[i], (np.arange(cap) < s))
+        # every padding row is a real sample, tiled cyclically
+        np.testing.assert_array_equal(
+            np.asarray(cd.data[i]), np.tile(d, (-(-cap // s), 1))[:cap])
+
+
+def test_client_data_cap_below_largest_client_raises():
+    data, _ = _ragged_world(0, 3)
+    with pytest.raises(ValueError):
+        B.client_data_from_lists(data, cap=max(d.shape[0] for d in data) - 1)
+
+
+def test_as_client_data_passthrough_rejects_extras():
+    data, labels = _ragged_world(1, 2)
+    cd = B.client_data_from_lists(data, labels)
+    assert B.as_client_data(cd) is cd
+    with pytest.raises(ValueError):
+        B.as_client_data(cd, labels=labels)
+
+
+# ---------------------------------------------------------------------------
+# stacked clustering parity (batched vs per-client loop)
+# ---------------------------------------------------------------------------
+
+def test_masked_moments_match_unpadded_bitwise():
+    """client_moments over zero-masked padding == the unpadded moments."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((23, 17)).astype(np.float32)
+    xp = jnp.asarray(np.tile(x, (2, 1))[:40])
+    mask = (jnp.arange(40) < 23).astype(jnp.float32)
+    s1p, s2p = P.client_moments(xp, mask)
+    s1, s2 = P.client_moments(jnp.asarray(x), jnp.ones(23))
+    assert bool(jnp.all(s1 == s1p)) and bool(jnp.all(s2 == s2p))
+
+
+def test_kmeans_masked_full_size_matches_reference_kmeans():
+    """size == cap degenerates bit-for-bit to the unmasked kmeans."""
+    x = jnp.asarray(np.random.default_rng(4).standard_normal(
+        (50, 8)).astype(np.float32))
+    a = KM.kmeans(jax.random.PRNGKey(5), x, 4, n_iters=15)
+    b = KM.kmeans_masked(jax.random.PRNGKey(5), x, jnp.int32(50), 4,
+                         n_iters=15)
+    assert bool(jnp.all(a.centroids == b.centroids))
+    assert bool(jnp.all(a.assignments == b.assignments))
+    assert bool(a.inertia == b.inertia)
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.integers(2, 6), seed=st.integers(0, 2**31 - 1))
+def test_kmeans_batched_matches_per_client_loop_bitwise(n, seed):
+    data, _ = _ragged_world(seed, n, lo=8, hi=30, shape=(6,))
+    cd = B.client_data_from_lists(data)
+    z = cd.data
+    key = jax.random.PRNGKey(seed % 1000)
+    bat = KM.kmeans_batched(key, z, cd.sizes, 3, 12)
+    keys = jax.random.split(key, n)
+    for i in range(n):
+        ref = KM.kmeans_masked(keys[i], z[i], cd.sizes[i], 3, 12)
+        assert bool(jnp.all(ref.centroids == bat.centroids[i])), i
+        s = int(cd.sizes[i])
+        assert bool(jnp.all(ref.assignments[:s] == bat.assignments[i, :s])), i
+
+
+def test_cluster_clients_stacked_matches_loop_bitwise():
+    """The whole jitted clustering program vs the host-loop reference:
+    PCA basis, centroids and assignments identical to the bit."""
+    data, _ = _ragged_world(7, 5, lo=20, hi=60, shape=(4, 4, 1))
+    cfg = PipelineConfig(n_pca=6, n_clusters=3, kmeans_iters=10)
+    key = jax.random.PRNGKey(8)
+    pca_s, cents_s, asg_s = cluster_clients(key, data, cfg)
+    pca_l, cents_l, asg_l = cluster_clients_loop(key, data, cfg)
+    assert bool(jnp.all(pca_s.components == pca_l.components))
+    assert bool(jnp.all(cents_s == cents_l))
+    assert bool(jnp.all(asg_s == asg_l))
+
+
+def test_lambda_matrix_stacked_matches_list_path():
+    rng = np.random.default_rng(9)
+    n, k, d = 5, 3, 4
+    cents = jnp.asarray(rng.standard_normal((n, k, d)).astype(np.float32))
+    trust = T.make_trust(jax.random.PRNGKey(10), n, k, 0.8)
+    beta = D.median_heuristic_beta([cents[i] for i in range(n)], 0.9)
+    lam_list = D.lambda_matrix([cents[i] for i in range(n)], trust,
+                               float(beta))
+    lam_stacked = D.lambda_matrix(cents, trust, float(beta))
+    np.testing.assert_array_equal(np.asarray(lam_list),
+                                  np.asarray(lam_stacked))
+    beta_stacked = D.median_heuristic_beta(cents, 0.9)
+    assert float(beta) == float(beta_stacked)
+
+
+# ---------------------------------------------------------------------------
+# exchange overflow policy at the cap boundary
+# ---------------------------------------------------------------------------
+
+def _exchange_world(reserve=6):
+    """Two clients with dissimilar data.  One-step AEs reconstruct the
+    low-intensity class better everywhere, so exactly one direction is
+    accepted: receiver 0 (own data ~0.1) scores transmitter 1's ~0.9
+    reserve as unfamiliar and takes all ``reserve`` samples; receiver 1
+    rejects.  That gives a deterministic 6-row transfer to clip against
+    the cap."""
+    rng = np.random.default_rng(11)
+    xa = jnp.asarray(rng.uniform(0, 0.2, (20, 16, 16, 1)).astype(np.float32))
+    xb = jnp.asarray(rng.uniform(0.8, 1.0, (12, 16, 16, 1)).astype(np.float32))
+    labels = [jnp.zeros(20, jnp.int32), jnp.ones(12, jnp.int32)]
+    assigns = [jnp.zeros(20, jnp.int32), jnp.zeros(12, jnp.int32)]
+    trust = [jnp.ones((2, 1), jnp.int8)] * 2
+    in_edge = jnp.asarray([1, 0])
+    pf = jnp.zeros((2, 2))
+    return [xa, xb], labels, assigns, trust, in_edge, pf
+
+
+def _run(cfg, cap=None, method="batched"):
+    data, labels, assigns, trust, in_edge, pf = _exchange_world(
+        cfg.reserve_per_cluster)
+    cd = B.client_data_from_lists(data, labels, cap=cap)
+    return EX.run_exchange(jax.random.PRNGKey(12), cd, None, assigns, trust,
+                           in_edge, pf, AE_CFG, cfg, method=method), data
+
+
+def test_exchange_grow_matches_loop_concat():
+    cfg = EX.ExchangeConfig(reserve_per_cluster=6)
+    res, data = _run(cfg)
+    data_l, labels_l, assigns, trust, in_edge, pf = _exchange_world(6)
+    ref = EX.run_exchange(jax.random.PRNGKey(12), data_l, labels_l, assigns,
+                          trust, in_edge, pf, AE_CFG, cfg, method="loop")
+    assert ref.gate_decisions == res.gate_decisions
+    np.testing.assert_array_equal(ref.moved_counts, res.moved_counts)
+    for a, b in zip(ref.datasets, res.datasets):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(ref.labels, res.labels):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_exchange_drop_clips_at_cap_boundary():
+    """cap leaves room for only part of the accepted transfer: the tail is
+    dropped deterministically, sizes clamp to cap, and the delivered prefix
+    matches the grow-policy payload."""
+    grow, _ = _run(EX.ExchangeConfig(reserve_per_cluster=6))
+    assert int(grow.moved_counts[0]) == 6   # rx 0 accepts the full reserve
+    cap = 20 + 2                            # room for 2 of client 0's 6
+    res, data = _run(EX.ExchangeConfig(reserve_per_cluster=6,
+                                       overflow="drop"), cap=cap)
+    cd = res.client_data
+    assert cd.cap == cap
+    np.testing.assert_array_equal(np.asarray(res.moved_counts), [2, 0])
+    np.testing.assert_array_equal(np.asarray(cd.sizes), [22, 12])
+    # the delivered rows are the *prefix* of the full transfer
+    np.testing.assert_array_equal(
+        np.asarray(res.datasets[0][20:]),
+        np.asarray(grow.datasets[0][20:22]))
+    # receiver 1 (nothing accepted) is untouched by the clipping
+    np.testing.assert_array_equal(np.asarray(res.datasets[1]),
+                                  np.asarray(grow.datasets[1]))
+
+
+def test_exchange_exact_fit_at_cap_boundary_never_drops():
+    cap = 20 + 6
+    res, _ = _run(EX.ExchangeConfig(reserve_per_cluster=6,
+                                    overflow="drop"), cap=cap)
+    np.testing.assert_array_equal(np.asarray(res.moved_counts), [6, 0])
+    np.testing.assert_array_equal(np.asarray(res.client_data.sizes),
+                                  [26, 12])
+
+
+def test_exchange_overflow_policy_validated_up_front():
+    """Unknown policies fail on either plane; the loop plane (whose ragged
+    concat has no capacity notion) rejects non-grow policies explicitly
+    instead of silently ignoring them."""
+    with pytest.raises(ValueError, match="overflow policy"):
+        _run(EX.ExchangeConfig(reserve_per_cluster=6, overflow="dorp"),
+             method="loop")
+    with pytest.raises(ValueError, match="loop plane"):
+        _run(EX.ExchangeConfig(reserve_per_cluster=6, overflow="drop"),
+             method="loop")
+
+
+def test_exchange_error_policy_raises_on_overflow():
+    with pytest.raises(ValueError, match="overflow"):
+        _run(EX.ExchangeConfig(reserve_per_cluster=6, overflow="error"),
+             cap=21)
+    # but an exact fit passes
+    res, _ = _run(EX.ExchangeConfig(reserve_per_cluster=6,
+                                    overflow="error"), cap=26)
+    assert int(res.moved_counts[0]) == 6
+
+
+def test_unlabeled_client_data_exchanges_without_labels():
+    data, _, assigns, trust, in_edge, pf = _exchange_world(6)
+    cd = B.client_data_from_lists(data)
+    res = EX.run_exchange(jax.random.PRNGKey(12), cd, None, assigns, trust,
+                          in_edge, pf, AE_CFG,
+                          EX.ExchangeConfig(reserve_per_cluster=6))
+    assert res.labels is None and res.client_data.labels is None
+    assert int(np.asarray(res.moved_dev).sum()) > 0

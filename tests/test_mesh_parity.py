@@ -2,9 +2,10 @@
 
 A child process runs under ``--xla_force_host_platform_device_count=4`` (the
 parent's device count is already frozen) and reports digests/deltas for the
-exchange gate, AE pretraining, one FL segment and the RL discovery bursts
-(mixed policy, UCB, and a warm-started resume) at mesh sizes 1 and 4
-against the plain unsharded program (``repro.meshlab.parity_report``).
+clustering program, exchange engine, AE pretraining, one FL segment and the
+RL discovery bursts (mixed policy, UCB, and a warm-started resume) at mesh
+sizes 1 and 4 against the plain unsharded program
+(``repro.meshlab.parity_report``).
 
 Contract:
   * mesh=1 placement is **bit-identical** to the single-device path for all
@@ -16,7 +17,12 @@ Contract:
   * the discovery plane's two collectives (episode-mean reward, r_net)
     reassociate the same way and the deltas feed back through the Q-table
     accumulation, so parity at mesh=4 is a small Q delta plus agreement of
-    the final Eq. 7 links.
+    the final Eq. 7 links;
+  * the clustering program (stacked federated PCA + vmapped K-means++) is
+    bit-identical to the per-client host-loop reference on a single device
+    and at mesh=1; at mesh=4 its one collective (the PCA moment
+    ``client_sum``) reassociates, so the bar is a <=1e-6 centroid delta
+    with every cluster assignment unchanged.
 """
 import json
 import os
@@ -53,9 +59,24 @@ def report():
 
 def test_mesh1_bit_identical_to_single_device(report):
     """Sharding rules on a 1-device mesh change nothing, bit for bit."""
-    for path in ("gate", "pretrain", "fl", "disc", "disc_ucb", "disc_warm"):
+    for path in ("gate", "pretrain", "fl", "cluster",
+                 "disc", "disc_ucb", "disc_warm"):
         assert report[f"{path}_digest_mesh1"] == \
             report[f"{path}_digest_base"], path
+
+
+def test_cluster_stacked_matches_host_loop_bitwise(report):
+    """The jitted stacked clustering program equals the per-client host
+    loop bit-for-bit (masked moments, seeding draws, Lloyd updates)."""
+    assert report["cluster_loop_bitwise"]
+
+
+def test_cluster_sharded_parity(report):
+    """mesh=4: only the PCA moment all-reduce reassociates — centroids
+    within 1e-6 of the single-device program, assignments unchanged."""
+    assert report["cluster_cents_maxdiff_mesh4"] <= 1e-6
+    assert report["cluster_assign_agree_mesh4"] == \
+        report["cluster_assign_total_mesh4"]
 
 
 def test_gate_sharded_bit_parity(report):
