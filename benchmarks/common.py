@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.pipeline import PipelineConfig, run_pipeline
 from repro.core.qlearning import RLConfig, uniform_graph
 from repro.data import partition_by_classes
@@ -111,3 +112,37 @@ class Timer:
 
     def __exit__(self, *a):
         self.elapsed = time.time() - self.t0
+
+
+# Phase-attribution fields benches attach to their rows: bench field name ->
+# library-level span name (`repro.obs`).  Library spans (not the
+# orchestrator's re-* umbrella labels) so segment-0's one-shot pipeline
+# stages and later re-discovery phases fold into the same bucket.
+PHASE_FIELDS = (
+    ("t_cluster", "cluster"),
+    ("t_discover", "discover"),
+    ("t_exchange", "exchange"),        # includes the nested pretrain + gate
+    ("t_pretrain", "pretrain"),        # ... broken out for visibility
+    ("t_fl", "fl"),
+    ("t_env", "env-step"),
+    ("t_metrics", "metrics-materialize"),
+)
+
+
+def phase_attribution(events) -> dict:
+    """One bench row's phase fields from a drained obs span list: wall
+    seconds per phase plus the row's jit-compile ("n_retraces") and
+    ``device_get``-transfer counts (summed over top-level spans only —
+    a parent span's counters already include its children's).
+
+    NB the fields are span *totals*, so nested pairs overlap by design:
+    ``t_pretrain`` is a subset of ``t_exchange`` (see PHASE_FIELDS) — the
+    fields attribute wall time per phase, they do not partition it."""
+    totals = obs.phase_totals(events)
+    row = {}
+    for field, name in PHASE_FIELDS:
+        d = totals.get(name)
+        row[field] = round(d["total"], 6) if d else 0.0
+    row["n_retraces"] = sum(e.compiles for e in events if e.depth == 0)
+    row["n_transfers"] = sum(e.transfers for e in events if e.depth == 0)
+    return row

@@ -6,12 +6,23 @@ data partition, seeds) is simulated under the three orchestrator modes.
 Derived fields per row: final global recon loss, mean link churn, expected
 vs realized delivery rate, data moved, and whether online re-discovery beat
 the stale one-shot graph.
+
+Observability: every row runs under an enabled span tracer (`repro.obs`)
+with its own JSONL manifest at ``runs/obs/<bench>__<scenario>_<mode>.jsonl``
+— phase-attribution fields (``t_cluster``/``t_discover``/``t_exchange``/
+``t_fl``/``t_env``/``t_metrics``, ``n_retraces``, ``n_transfers``) land on
+the row next to its wall time, and ``python -m tools.trace_report <path>``
+reproduces the same breakdown from the manifest.  Set ``REPRO_PROFILE=dir``
+(or ``benchmarks/run.py --profile dir``) to additionally capture a
+TensorBoard trace per row.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 
 from benchmarks import common as C
+from repro import obs
 from repro.core.exchange import ExchangeConfig
 from repro.core.pipeline import PipelineConfig
 from repro.core.qlearning import RLConfig
@@ -41,11 +52,13 @@ def run(bc: C.BenchConfig | None = None, dataset: str = "fmnist",
         scenarios=SCENARIOS, quick: bool = True, modes=MODES,
         save_as: str | None = None):
     bc = bc or C.BenchConfig()
+    name = save_as or f"dynamic_scenarios_{dataset}"
     key, xs, ys, ev, ae_cfg = C.make_world(bc, dataset)
     # Warm the jit caches (pipeline, AE pretrain, gate, FL round) with one
     # single-segment run so the first timed row does not absorb the bulk of
     # compilation; rows whose exchanged dataset shapes differ still pay
-    # their own (much smaller) retrace.
+    # their own (much smaller) retrace.  The warm-up runs untraced so each
+    # row's manifest holds exactly that row's spans.
     warm = dataclasses.replace(_orch_cfg(bc, "online", quick), n_segments=1,
                                iters_per_segment=bc.tau_a)
     run_orchestrator(key, xs, ys, ae_cfg, warm, "static", ev.images)
@@ -53,18 +66,42 @@ def run(bc: C.BenchConfig | None = None, dataset: str = "fmnist",
     for scenario in scenarios:
         for mode in modes:
             cfg = _orch_cfg(bc, mode, quick)
-            with C.Timer() as t:
+            tag = f"{name}__{scenario}_{mode}"
+            obs.enable(
+                manifest=os.path.join("runs", "obs", f"{tag}.jsonl"),
+                meta={"bench": name, "row": f"{scenario}/{mode}",
+                      "dataset": dataset, "quick": quick,
+                      "config": dataclasses.asdict(bc)})
+            with C.Timer() as t, obs.maybe_profile(tag):
                 res = run_orchestrator(key, xs, ys, ae_cfg, cfg, scenario,
                                        ev.images)
+            rec = obs.disable()
             s = res.trace.summary()
             s["elapsed_us"] = t.elapsed * 1e6
+            s.update(C.phase_attribution(rec["events"]))
             out[f"{scenario}/{mode}"] = s
             print(f"  {scenario}/{mode}: final_loss={s['final_loss']:.5f} "
                   f"churn={s['mean_link_churn']:.2f} "
                   f"delivery={s['mean_expected_delivery']:.3f} "
-                  f"moved={s['total_moved']}", flush=True)
-    C.save_json(save_as or f"dynamic_scenarios_{dataset}", out)
+                  f"moved={s['total_moved']} "
+                  f"[fl {s['t_fl']:.1f}s, discover {s['t_discover']:.1f}s, "
+                  f"retraces {s['n_retraces']}, "
+                  f"transfers {s['n_transfers']}]", flush=True)
+    C.save_json(name, out)
     return out
+
+
+def _phase_derived(s: dict) -> str:
+    """The row's phase-attribution fields as derived k=v CSV text."""
+    return (f"t_cluster={s['t_cluster']:.3f};"
+            f"t_discover={s['t_discover']:.3f};"
+            f"t_exchange={s['t_exchange']:.3f};"
+            f"t_pretrain={s['t_pretrain']:.3f};"
+            f"t_fl={s['t_fl']:.3f};"
+            f"t_env={s['t_env']:.3f};"
+            f"t_metrics={s['t_metrics']:.3f};"
+            f"n_retraces={s['n_retraces']};"
+            f"n_transfers={s['n_transfers']}")
 
 
 def smoke(quick=True):
@@ -86,7 +123,8 @@ def smoke(quick=True):
           f"link_churn={s['mean_link_churn']:.3f};"
           f"expected_delivery={s['mean_expected_delivery']:.3f};"
           f"moved={s['total_moved']};"
-          f"rediscoveries={s['n_rediscoveries']}")
+          f"rediscoveries={s['n_rediscoveries']};"
+          + _phase_derived(s))
 
 
 def main(quick=True):
@@ -111,7 +149,8 @@ def main(quick=True):
                        + f";moved={s['total_moved']};"
                        f"rediscoveries={s['n_rediscoveries']};"
                        f"min_available={s['min_available']};"
-                       f"online_wins={online_wins}")
+                       f"online_wins={online_wins};"
+                       + _phase_derived(s))
             # each row carries its *own* orchestrator wall time (the whole
             # suite's mean was recorded here before)
             print(f"dynamic_{scenario}_{mode},{s['elapsed_us']:.0f},{derived}")

@@ -3,12 +3,16 @@ the roofline table + the dynamic-deployment scenarios.  Prints
 ``name,us_per_call,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5] \\
-        [--json runs/bench/BENCH_quick.json]
+        [--json runs/bench/BENCH_quick.json] [--profile runs/prof]
 
 --full uses the paper-scale settings (30 clients, 1500 iterations); the
 default quick settings preserve every claim's *ordering* at ~10x less CPU.
 --json additionally records every emitted CSV row as a JSON artifact so the
 perf trajectory across PRs is machine-diffable.
+--profile DIR captures a jax.profiler (TensorBoard) trace per instrumented
+bench region under DIR (equivalent to REPRO_PROFILE=DIR); the dynamic rows
+additionally stream obs span manifests under runs/obs/ — see
+tools/trace_report.py.
 """
 import argparse
 import io
@@ -75,7 +79,12 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the emitted rows to a BENCH_*.json "
                          "artifact at PATH")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture jax.profiler traces of instrumented "
+                         "regions under DIR (sets REPRO_PROFILE)")
     args = ap.parse_args()
+    if args.profile:
+        os.environ["REPRO_PROFILE"] = args.profile
     if args.only:
         names = args.only.split(",")
         unknown = [n for n in names if n not in BENCHES]

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro import sharding as sh
 from repro.core import batching
 from repro.core.batching import ClientData, as_client_data, \
@@ -464,32 +465,44 @@ def run_exchange(key, datasets, labels, assignments, trust, in_edge, p_fail,
             "the loop plane only implements the 'grow' semantics (its "
             "ragged concat has no capacity); use the batched plane for "
             f"overflow={cfg.overflow!r}")
-    cd = as_client_data(datasets, labels, rules=rules)
-    n = cd.n_clients
-    k_pre, k_sel, k_ch = jax.random.split(key, 3)
-    sel = _select_reserves(k_sel, assignments,
-                           [t.shape[1] for t in trust],
-                           cfg.reserve_per_cluster, sizes=cd.sizes)
-    fail_u = jax.random.uniform(k_ch, (n,))
+    with obs.span("exchange", method=method):
+        cd = as_client_data(datasets, labels, rules=rules)
+        n = cd.n_clients
+        k_pre, k_sel, k_ch = jax.random.split(key, 3)
+        sel = _select_reserves(k_sel, assignments,
+                               [t.shape[1] for t in trust],
+                               cfg.reserve_per_cluster, sizes=cd.sizes)
+        fail_u = jax.random.uniform(k_ch, (n,))
 
-    if method == "loop":
-        data_l = cd.data_list()
-        labels_l = cd.label_list()
-        if labels_l is None:
-            raise ValueError("the loop plane needs labels; pass them (the "
-                             "batched plane accepts unlabeled ClientData)")
-        params = ae_params if ae_params is not None else \
-            pretrain_autoencoders(k_pre, data_l, ae_cfg, cfg)
-        if not isinstance(params, (list, tuple)):
-            params = batching.unstack_pytree(params, n)
-        return _gate_loop(data_l, labels_l, trust, in_edge, sel,
-                          np.asarray(fail_u, np.float32), p_fail,
-                          list(params), ae_cfg, cfg)
-    if method != "batched":
-        raise ValueError(f"unknown exchange method: {method!r}")
-    params = ae_params if ae_params is not None else \
-        pretrain_autoencoders_batched(k_pre, cd, ae_cfg, cfg, rules)
-    if isinstance(params, (list, tuple)):
-        params = batching.stack_pytrees(list(params), rules)
-    return _gate_batched(cd, trust, in_edge, sel, fail_u, p_fail,
-                         params, ae_cfg, cfg, rules)
+        if method == "loop":
+            data_l = cd.data_list()
+            labels_l = cd.label_list()
+            if labels_l is None:
+                raise ValueError(
+                    "the loop plane needs labels; pass them (the batched "
+                    "plane accepts unlabeled ClientData)")
+            if ae_params is not None:
+                params = ae_params
+            else:
+                with obs.span("pretrain", method=method):
+                    params = pretrain_autoencoders(k_pre, data_l, ae_cfg,
+                                                   cfg)
+            if not isinstance(params, (list, tuple)):
+                params = batching.unstack_pytree(params, n)
+            with obs.span("gate", method=method):
+                return _gate_loop(data_l, labels_l, trust, in_edge, sel,
+                                  np.asarray(fail_u, np.float32), p_fail,
+                                  list(params), ae_cfg, cfg)
+        if method != "batched":
+            raise ValueError(f"unknown exchange method: {method!r}")
+        if ae_params is not None:
+            params = ae_params
+        else:
+            with obs.span("pretrain", method=method):
+                params = pretrain_autoencoders_batched(k_pre, cd, ae_cfg,
+                                                       cfg, rules)
+        if isinstance(params, (list, tuple)):
+            params = batching.stack_pytrees(list(params), rules)
+        with obs.span("gate", method=method):
+            return _gate_batched(cd, trust, in_edge, sel, fail_u, p_fail,
+                                 params, ae_cfg, cfg, rules)

@@ -23,6 +23,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro import sharding as sh
 from repro.core import channel as ch
 from repro.core import dissimilarity as ds
@@ -134,9 +135,10 @@ def cluster_clients(key, datasets, cfg: PipelineConfig, rules=None):
     axis shards over the mesh (per-client K-means fits are shard-local, the
     PCA moment aggregation is the single ``client_sum`` all-reduce).
     """
-    cd = as_client_data(datasets, rules=rules)
-    return _cluster_impl(key, cd.data, cd.sizes, cfg.n_pca, cfg.n_clusters,
-                         cfg.kmeans_iters, rules)
+    with obs.span("cluster"):
+        cd = as_client_data(datasets, rules=rules)
+        return _cluster_impl(key, cd.data, cd.sizes, cfg.n_pca,
+                             cfg.n_clusters, cfg.kmeans_iters, rules)
 
 
 def cluster_clients_loop(key, datasets, cfg: PipelineConfig):
@@ -208,34 +210,37 @@ def run_pipeline(key, datasets, labels=None, ae_cfg: AEConfig = None,
     program (``cluster_clients``), the RL discovery loop's agent-major
     Q-tables/buffers (``core/qlearning.py``) and the exchange engine's
     stacked gate scoring + scatter (``core/exchange.py``)."""
-    k_cl, k_tr, k_ch, k_rl, k_ex = split_pipeline_keys(key)
-    cd = as_client_data(datasets, labels, rules=rules)
-    n = cd.n_clients
+    with obs.span("pipeline"):
+        k_cl, k_tr, k_ch, k_rl, k_ex = split_pipeline_keys(key)
+        cd = as_client_data(datasets, labels, rules=rules)
+        n = cd.n_clients
 
-    pca, cents, assigns = cluster_clients(k_cl, cd, cfg, rules=rules)
-    trust = tr.make_trust(k_tr, n, cfg.n_clusters, cfg.p_trust)
-    if rss is None:
-        rss = ch.make_rss(k_ch, n, cfg.channel)
-    p_fail = ch.failure_prob(rss, cfg.channel)
+        pca, cents, assigns = cluster_clients(k_cl, cd, cfg, rules=rules)
+        with obs.span("trust-channel"):
+            trust = tr.make_trust(k_tr, n, cfg.n_clusters, cfg.p_trust)
+            if rss is None:
+                rss = ch.make_rss(k_ch, n, cfg.channel)
+            p_fail = ch.failure_prob(rss, cfg.channel)
+            beta, lam_before, local_r = link_rewards(cents, trust, p_fail,
+                                                     cfg)
 
-    beta, lam_before, local_r = link_rewards(cents, trust, p_fail, cfg)
+        if in_edge is None:
+            graph = ql.discover_graph(k_rl, local_r, p_fail, cfg.rl,
+                                      rules=rules)
+            in_edge = graph.in_edge
+        else:
+            in_edge = jnp.asarray(in_edge)
+            graph = ql.GraphResult(in_edge, jnp.zeros((n, n)),
+                                   jnp.zeros((0,)), jnp.zeros((0,)))
 
-    if in_edge is None:
-        graph = ql.discover_graph(k_rl, local_r, p_fail, cfg.rl, rules=rules)
-        in_edge = graph.in_edge
-    else:
-        in_edge = jnp.asarray(in_edge)
-        graph = ql.GraphResult(in_edge, jnp.zeros((n, n)),
-                               jnp.zeros((0,)), jnp.zeros((0,)))
+        res = ex.run_exchange(k_ex, cd, None, assigns, trust, in_edge,
+                              p_fail, ae_cfg, cfg.exchange,
+                              method=exchange_method, rules=rules)
 
-    res = ex.run_exchange(k_ex, cd, None, assigns, trust, in_edge,
-                          p_fail, ae_cfg, cfg.exchange,
-                          method=exchange_method, rules=rules)
+        # Recompute dissimilarity on the post-exchange datasets (Fig. 3).
+        _, cents_after, _ = cluster_clients(k_cl, res.client_data, cfg,
+                                            rules=rules)
+        lam_after = ds.lambda_matrix(cents_after, trust, beta)
 
-    # Recompute dissimilarity on the post-exchange datasets (paper Fig. 3).
-    _, cents_after, _ = cluster_clients(k_cl, res.client_data, cfg,
-                                        rules=rules)
-    lam_after = ds.lambda_matrix(cents_after, trust, beta)
-
-    return PipelineResult(res.client_data, in_edge, lam_before, lam_after,
-                          p_fail, graph, cents, trust, res)
+        return PipelineResult(res.client_data, in_edge, lam_before,
+                              lam_after, p_fail, graph, cents, trust, res)

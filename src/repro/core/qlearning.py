@@ -25,11 +25,13 @@ paper's expression whenever Q >= 0 elementwise.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro import sharding as sh
 from repro.core import rewards as rw
 
@@ -126,7 +128,10 @@ def init_rl_state(n: int, cfg: RLConfig = RLConfig()) -> RLState:
     """Cold-start agent state (paper: small equal Q values, empty buffers)."""
     m = cfg.buffer_size
     return RLState(
-        q=jnp.full((n, n), cfg.q_init),
+        # strong-typed f32 (a python-float fill would give a weak-typed
+        # array, whose aval differs from the scan's strong-typed output
+        # state — costing warm-start calls a pointless retrace)
+        q=jnp.full((n, n), cfg.q_init, jnp.float32),
         counts=jnp.zeros((n, n)),
         buf_actions=jnp.zeros((n, m), jnp.int32),
         buf_rewards=jnp.zeros((n, m)),
@@ -158,13 +163,30 @@ def discover_graph(key, local_r, p_fail, cfg: RLConfig = RLConfig(),
     rides straight back in (re-placement is a no-op ``device_put``).
     """
     n = local_r.shape[0]
-    m = cfg.buffer_size
     n_ep = cfg.n_episodes if n_episodes is None else n_episodes
-    state = init_state if init_state is not None else init_rl_state(n, cfg)
-    # Place every agent-major operand on the CLIENTS mesh axis (scalars in
-    # the state — r_net_prev, t — map to replicated).  rules=None: identity.
-    local_r, p_fail, state = sh.shard_clients(
-        (jnp.asarray(local_r), jnp.asarray(p_fail), state), rules)
+    with obs.span("discover", episodes=int(n_ep), agents=int(n),
+                  warm=init_state is not None, policy=cfg.policy):
+        state = init_state if init_state is not None else init_rl_state(n, cfg)
+        # Place every agent-major operand on the CLIENTS mesh axis (scalars
+        # in the state — r_net_prev, t — map to replicated); rules=None is
+        # the identity.  Placement happens outside the jit below so the
+        # traced program only ever sees correctly-placed operands.
+        local_r, p_fail, state = sh.shard_clients(
+            (jnp.asarray(local_r), jnp.asarray(p_fail), state), rules)
+        return _discover_impl(key, local_r, p_fail, state, cfg, n_ep, rules)
+
+
+# The module-level jit (cfg/n_ep/rules static) is load-bearing for the
+# online orchestrator, not a micro-optimisation: a bare `lax.scan` outside
+# jit re-traces its body every call, and the eager dispatch cache keys on
+# the fresh jaxpr — so every warm re-discovery burst was re-COMPILING the
+# episode scan (~0.6 s on CPU) despite identical shapes.  Under a proper
+# jit the cache keys on (function, avals, statics) and steady-state bursts
+# are cache hits; tests/test_obs.py pins this with the compile counter.
+@functools.partial(jax.jit, static_argnums=(4, 5, 6))
+def _discover_impl(key, local_r, p_fail, state, cfg, n_ep, rules):
+    n = local_r.shape[0]
+    m = cfg.buffer_size
     use_ucb = cfg.policy == "ucb"
 
     def episode(state: RLState, inp):

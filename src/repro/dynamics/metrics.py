@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -51,7 +52,6 @@ def link_churn(prev_edge, in_edge) -> float:
 def link_churn_dev(prev_edge, in_edge):
     """:func:`link_churn` as a device scalar — no host sync; the
     orchestrator defers materialisation to one transfer per run."""
-    import jax.numpy as jnp
     if prev_edge is None:
         return jnp.zeros(())
     return jnp.mean((jnp.asarray(prev_edge)
@@ -62,7 +62,6 @@ def delivery_stats_dev(in_edge, p_fail):
     """(mean_pfail, expected_delivery) as device scalars over the chosen
     non-self links; matches :func:`delivery_stats` (realized delivery still
     derives host-side from the exchange's gate decisions)."""
-    import jax.numpy as jnp
     in_edge = jnp.asarray(in_edge)
     n = in_edge.shape[0]
     live = in_edge != jnp.arange(n)
@@ -78,7 +77,6 @@ def realized_delivery_dev(in_edge, fail):
     """:func:`realized_delivery` from the batched exchange's device outputs
     (``ExchangeResult.fail``) — no gate-decision materialisation, no host
     sync; NaN when no link is live (the caller maps that to None)."""
-    import jax.numpy as jnp
     in_edge = jnp.asarray(in_edge)
     n = in_edge.shape[0]
     live = in_edge != jnp.arange(n)

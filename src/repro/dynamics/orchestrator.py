@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import exchange as ex
 from repro.core import qlearning as ql
 from repro.core.channel import failure_prob
@@ -114,13 +115,15 @@ def _rediscover(key, cd, trust, p_fail, cfg: OrchestratorConfig,
     across segments (re-placement inside ``discover_graph`` is a no-op)."""
     k_cl, k_rl = jax.random.split(key)
     pcfg = cfg.pipeline
-    _, cents, assigns = cluster_clients(k_cl, cd, pcfg, rules=rules)
-    if cfg.mode == "uniform":
-        return ql.uniform_graph(k_rl, cd.n_clients), rl_state, assigns
-    _beta, _lam, local_r = link_rewards(cents, trust, p_fail, pcfg)
-    graph = ql.discover_graph(k_rl, local_r, p_fail, pcfg.rl,
-                              init_state=rl_state,
-                              n_episodes=cfg.burst_episodes, rules=rules)
+    with obs.span("re-cluster"):
+        _, cents, assigns = cluster_clients(k_cl, cd, pcfg, rules=rules)
+    with obs.span("re-discover", mode=cfg.mode):
+        if cfg.mode == "uniform":
+            return ql.uniform_graph(k_rl, cd.n_clients), rl_state, assigns
+        _beta, _lam, local_r = link_rewards(cents, trust, p_fail, pcfg)
+        graph = ql.discover_graph(k_rl, local_r, p_fail, pcfg.rl,
+                                  init_state=rl_state,
+                                  n_episodes=cfg.burst_episodes, rules=rules)
     return graph.in_edge, graph.state, assigns
 
 
@@ -158,6 +161,14 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
             "silently dropped and straggler masks applied to shifted "
             "windows)")
     scn = get_scenario(scenario)
+    with obs.span("orchestrator", mode=cfg.mode, scenario=scn.name,
+                  n_segments=cfg.n_segments):
+        return _orchestrate(key, datasets, labels, ae_cfg, cfg, scn,
+                            eval_data, rules)
+
+
+def _orchestrate(key, datasets, labels, ae_cfg, cfg: OrchestratorConfig,
+                 scn, eval_data, rules) -> OrchestratorResult:
     k_pipe, k_env, k_fl = jax.random.split(key, 3)
     n = len(datasets) if isinstance(datasets, (list, tuple)) else \
         datasets.n_clients
@@ -186,66 +197,74 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
     carry = None
     prev_edge = None
     for s in range(cfg.n_segments):
-        rediscovered = s == 0
-        if s > 0:
-            env = env_step(jax.random.fold_in(k_env, s), env, scn,
-                           pcfg.channel)
-            p_fail = failure_prob(env.rss, pcfg.channel)
-            exch = None
-            if cfg.mode != "oneshot" and s % cfg.rediscover_every == 0:
-                new_edge, rl_state, assigns = _rediscover(
-                    jax.random.fold_in(k_pipe, 100 + s), cd,
-                    trust, p_fail, cfg, rl_state, rules=rules)
-                if cfg.exchange_on_rediscover:
-                    exch = ex.run_exchange(
-                        jax.random.fold_in(k_pipe, 200 + s), cd, None,
-                        assigns, trust, new_edge, p_fail, ae_cfg,
-                        pcfg.exchange, rules=rules)
-                    cd = exch.client_data
-                prev_edge, in_edge = in_edge, new_edge
-                rediscovered = True
+        with obs.span("segment", segment=s):
+            rediscovered = s == 0
+            if s > 0:
+                with obs.span("env-step", segment=s):
+                    env = env_step(jax.random.fold_in(k_env, s), env, scn,
+                                   pcfg.channel)
+                    p_fail = failure_prob(env.rss, pcfg.channel)
+                exch = None
+                if cfg.mode != "oneshot" and s % cfg.rediscover_every == 0:
+                    new_edge, rl_state, assigns = _rediscover(
+                        jax.random.fold_in(k_pipe, 100 + s), cd,
+                        trust, p_fail, cfg, rl_state, rules=rules)
+                    if cfg.exchange_on_rediscover:
+                        with obs.span("re-exchange", segment=s):
+                            exch = ex.run_exchange(
+                                jax.random.fold_in(k_pipe, 200 + s), cd,
+                                None, assigns, trust, new_edge, p_fail,
+                                ae_cfg, pcfg.exchange, rules=rules)
+                            cd = exch.client_data
+                    prev_edge, in_edge = in_edge, new_edge
+                    rediscovered = True
 
-        fl = fl_train(k_fl, cd, ae_cfg, flcfg, eval_data,
-                      avail_mask=env.available, init_carry=carry,
-                      start_iter=s * cfg.iters_per_segment,
-                      stop_iter=(s + 1) * cfg.iters_per_segment,
-                      rules=rules, defer_metrics=True)
-        carry = fl.carry
+            with obs.span("fl-segment", segment=s):
+                fl = fl_train(k_fl, cd, ae_cfg, flcfg, eval_data,
+                              avail_mask=env.available, init_carry=carry,
+                              start_iter=s * cfg.iters_per_segment,
+                              stop_iter=(s + 1) * cfg.iters_per_segment,
+                              rules=rules, defer_metrics=True)
+                carry = fl.carry
 
-        sampled = (pcfg.exchange.apply_channel_failure and rediscovered
-                   and exch is not None)
-        realized_dev = jnp.nan
-        host_realized = None
-        if sampled:
-            if exch.fail is not None:       # batched plane: stay on device
-                realized_dev = realized_delivery_dev(in_edge, exch.fail)
-            else:                           # loop plane: host decisions
-                host_realized = realized_delivery(in_edge,
-                                                  exch.gate_decisions)
-        pf_dev, expected_dev = delivery_stats_dev(in_edge, p_fail)
-        seg_loss = (fl.eval_loss[-1] if fl.eval_loss.size else
-                    eval_global_loss(carry.global_params, eval_data, ae_cfg))
-        pending.append(_PendingSegment(
-            segment=s, rediscovered=rediscovered, sampled=sampled,
-            host_realized=host_realized,
-            eval_iters=np.asarray(fl.eval_iters),
-            dev={
-                "eval_loss": seg_loss,
-                "in_edge": jnp.asarray(in_edge),
-                "link_churn": link_churn_dev(
-                    prev_edge if rediscovered and s > 0 else None, in_edge),
-                "mean_pfail": pf_dev,
-                "expected_delivery": expected_dev,
-                "n_available": jnp.sum(env.available),
-                "moved": (jnp.sum(exch.moved_dev)
-                          if exch is not None else jnp.zeros((), jnp.int32)),
-                "realized": realized_dev,
-                "eval_curve": fl.eval_loss,
-            }))
+            sampled = (pcfg.exchange.apply_channel_failure and rediscovered
+                       and exch is not None)
+            realized_dev = jnp.nan
+            host_realized = None
+            if sampled:
+                if exch.fail is not None:   # batched plane: stay on device
+                    realized_dev = realized_delivery_dev(in_edge, exch.fail)
+                else:                       # loop plane: host decisions
+                    host_realized = realized_delivery(in_edge,
+                                                      exch.gate_decisions)
+            pf_dev, expected_dev = delivery_stats_dev(in_edge, p_fail)
+            seg_loss = (fl.eval_loss[-1] if fl.eval_loss.size else
+                        eval_global_loss(carry.global_params, eval_data,
+                                         ae_cfg))
+            pending.append(_PendingSegment(
+                segment=s, rediscovered=rediscovered, sampled=sampled,
+                host_realized=host_realized,
+                eval_iters=np.asarray(fl.eval_iters),
+                dev={
+                    "eval_loss": seg_loss,
+                    "in_edge": jnp.asarray(in_edge),
+                    "link_churn": link_churn_dev(
+                        prev_edge if rediscovered and s > 0 else None,
+                        in_edge),
+                    "mean_pfail": pf_dev,
+                    "expected_delivery": expected_dev,
+                    "n_available": jnp.sum(env.available),
+                    "moved": (jnp.sum(exch.moved_dev) if exch is not None
+                              else jnp.zeros((), jnp.int32)),
+                    "realized": realized_dev,
+                    "eval_curve": fl.eval_loss,
+                }))
 
     # One host transfer for every per-segment metric of the whole run: the
-    # loop above never blocked on a device value.
-    host = jax.device_get([p.dev for p in pending])
+    # loop above never blocked on a device value.  (The transfer counter
+    # pins this contract: tests assert exactly one device_get per run.)
+    with obs.span("metrics-materialize"):
+        host = jax.device_get([p.dev for p in pending])
     trace = Trace()
     for p, h in zip(pending, host):
         realized = p.host_realized

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro import sharding as sh
 from repro.core.batching import as_client_data, stack_clients  # noqa: F401
 from repro.models import autoencoder as ae
@@ -250,17 +251,19 @@ def fl_train(key, datasets, ae_cfg: ae.AEConfig, cfg: FLConfig,
     eval_iters, eval_vals = [], []
     keys = jax.random.split(jax.random.fold_in(key, 1), n_rounds)
     carry = FLCarry(client_params, global_params, mu, nu, step0)
-    for r in range(start_round, stop_round):
-        kr = jax.random.split(keys[r], cfg.tau_a)
-        carry = _round_fn(cfg, ae_cfg, carry, data, sizes, agg_mask, kr,
-                          rules)
-        it = (r + 1) * cfg.tau_a
-        if it % cfg.eval_every == 0 or r == n_rounds - 1:
-            eval_iters.append(it)
-            eval_vals.append(_eval_loss_fn(
-                carry.global_params, eval_data, ae_cfg))
-    eval_loss = jnp.stack(eval_vals) if eval_vals else jnp.zeros((0,))
-    if not defer_metrics:
-        eval_loss = np.asarray(eval_loss)
+    with obs.span("fl", rounds=stop_round - start_round,
+                  start_iter=start_iter):
+        for r in range(start_round, stop_round):
+            kr = jax.random.split(keys[r], cfg.tau_a)
+            carry = _round_fn(cfg, ae_cfg, carry, data, sizes, agg_mask, kr,
+                              rules)
+            it = (r + 1) * cfg.tau_a
+            if it % cfg.eval_every == 0 or r == n_rounds - 1:
+                eval_iters.append(it)
+                eval_vals.append(_eval_loss_fn(
+                    carry.global_params, eval_data, ae_cfg))
+        eval_loss = jnp.stack(eval_vals) if eval_vals else jnp.zeros((0,))
+        if not defer_metrics:
+            eval_loss = np.asarray(eval_loss)
     return FLResult(carry.global_params, np.asarray(eval_iters),
                     eval_loss, carry.client_params, carry)

@@ -1,0 +1,98 @@
+"""JAX-aware counters: jit compilations and host transfers, observable.
+
+Two signals turn the repo's perf contracts into assertable numbers:
+
+**Compilations** — ``jax.monitoring`` fires
+``/jax/core/compile/backend_compile_duration`` once per actual XLA
+compilation (tracing cache hits fire nothing), so counting those events
+between two snapshots counts retraces of *anything* jitted in the window:
+the FL round fn, the exchange pretrain step, eager primitive dispatches.
+"pretrain compiles once across segments" becomes ``delta == 0``.
+
+**Transfers** — ``jax.device_get`` is wrapped (once, lazily, at the first
+:func:`install`) with a counting shim that also sums the fetched arrays'
+``nbytes``.  The orchestrator's deferred-metrics design claims exactly one
+``device_get`` per run; the counter makes that a regression test.  Scope:
+only the public ``jax.device_get`` entry point is counted — implicit
+materialisations (``np.asarray`` on an Array, ``int()`` on a scalar) are
+separate sync points and deliberately out of scope, because the contract
+under test is about the explicit metric-materialisation transfer.
+
+The monitoring listener and the ``device_get`` wrapper stay installed for
+the life of the process (JAX has no per-listener deregistration) but only
+*count* while :func:`set_active` is on, so an application that never enables
+observability pays one flag check per compile event and per ``device_get``
+call — both rare by construction.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+__all__ = ["install", "installed", "set_active", "snapshot", "live_memory"]
+
+_installed = False
+_active = False
+_n_compiles = 0
+_n_transfers = 0
+_bytes_fetched = 0
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+def _on_duration_event(event: str, duration_secs: float, **kwargs) -> None:
+    global _n_compiles
+    if _active and event == _COMPILE_EVENT:
+        _n_compiles += 1
+
+
+def install() -> None:
+    """Register the monitoring listener and wrap ``jax.device_get``.
+
+    Idempotent; called by ``tracer.start``.  Installation is deliberately
+    lazy (not at import) so merely importing ``repro.obs`` never touches
+    global JAX state."""
+    global _installed
+    if _installed:
+        return
+    jax.monitoring.register_event_duration_secs_listener(_on_duration_event)
+
+    real_device_get = jax.device_get
+
+    def counting_device_get(x):
+        if _active:
+            global _n_transfers, _bytes_fetched
+            _n_transfers += 1
+            _bytes_fetched += sum(
+                getattr(leaf, "nbytes", 0) for leaf in jax.tree.leaves(x)
+                if isinstance(leaf, jax.Array))
+        return real_device_get(x)
+
+    counting_device_get.__wrapped__ = real_device_get
+    counting_device_get.__name__ = "device_get"
+    counting_device_get.__doc__ = real_device_get.__doc__
+    jax.device_get = counting_device_get
+    _installed = True
+
+
+def installed() -> bool:
+    return _installed
+
+
+def set_active(on: bool) -> None:
+    global _active
+    _active = bool(on)
+
+
+def snapshot() -> Tuple[int, int, int]:
+    """(n_compiles, n_transfers, bytes_fetched) since install — deltas
+    between snapshots attribute the counts to a window (a span)."""
+    return _n_compiles, _n_transfers, _bytes_fetched
+
+
+def live_memory() -> Tuple[int, int]:
+    """(count, total nbytes) of live device arrays — an O(live-arrays)
+    walk, so the tracer only calls it when REPRO_OBS_MEM opts in."""
+    arrs = jax.live_arrays()
+    return len(arrs), sum(a.nbytes for a in arrs)

@@ -1,0 +1,55 @@
+"""Opt-in ``jax.profiler`` bridge: a TensorBoard trace around a named span.
+
+Wall-clock spans attribute *host* time; when a phase needs device-level
+attribution (which op, which fusion, how much of the 13–26 s online row is
+XLA vs dispatch), capture a real profiler trace around it:
+
+    REPRO_PROFILE=/tmp/prof PYTHONPATH=src python -m benchmarks.run \\
+        --only dynamic-smoke
+
+or ``benchmarks/run.py --profile /tmp/prof`` (sets the env var for the
+child benches).  Each :func:`maybe_profile` region writes a TensorBoard
+trace directory ``<dir>/<tag>`` viewable with
+``tensorboard --logdir <dir>`` (or ``xprof``).
+
+JAX supports one active trace at a time, so nested/overlapping regions are
+ignored (the outermost wins) rather than erroring, and when no directory is
+configured the context manager is a no-op flag check.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+__all__ = ["profile_dir", "maybe_profile"]
+
+_ENV = "REPRO_PROFILE"
+_tracing = False
+
+
+def profile_dir() -> str | None:
+    """The configured trace directory, or None (profiling off)."""
+    return os.environ.get(_ENV) or None
+
+
+@contextlib.contextmanager
+def maybe_profile(tag: str, out_dir: str | None = None):
+    """Capture a ``jax.profiler`` trace of the enclosed region as
+    ``<out_dir>/<tag>`` when profiling is configured (argument or
+    ``REPRO_PROFILE``); otherwise do nothing."""
+    global _tracing
+    d = out_dir or profile_dir()
+    if d is None or _tracing:
+        yield
+        return
+    path = os.path.join(d, tag)
+    os.makedirs(path, exist_ok=True)
+    _tracing = True
+    jax.profiler.start_trace(path)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+        _tracing = False
