@@ -126,6 +126,10 @@ PHASE_FIELDS = (
     ("t_fl", "fl"),
     ("t_env", "env-step"),
     ("t_metrics", "metrics-materialize"),
+    # fault-tolerance plane (zero on fault-free runs)
+    ("t_faults", "fault-inject"),
+    ("t_retry", "retry-exchange"),
+    ("t_checkpoint", "checkpoint-save"),
 )
 
 

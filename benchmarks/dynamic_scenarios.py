@@ -21,12 +21,17 @@ from __future__ import annotations
 import dataclasses
 import os
 
+import jax
+import numpy as np
+
 from benchmarks import common as C
 from repro import obs
 from repro.core.exchange import ExchangeConfig
 from repro.core.pipeline import PipelineConfig
 from repro.core.qlearning import RLConfig
 from repro.dynamics import OrchestratorConfig, run_orchestrator
+from repro.dynamics.scenarios import get_scenario
+from repro.faults import Preempted, RetryPolicy
 from repro.fl import FLConfig
 
 SCENARIOS = ("static", "fading", "churn")
@@ -125,6 +130,202 @@ def smoke(quick=True):
           f"moved={s['total_moved']};"
           f"rediscoveries={s['n_rediscoveries']};"
           + _phase_derived(s))
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance rows (repro.faults): degradation + recovery benchmarks
+# ---------------------------------------------------------------------------
+
+def _fault_cfg(bc: C.BenchConfig, quick: bool, retry: bool = False,
+               ckpt_dir: str | None = None,
+               n_segments: int | None = None) -> OrchestratorConfig:
+    """Online orchestrator config for the fault rows: fixed exchange cap
+    (compile-free steady state — the retry exchange reuses the gate's jit
+    cache), a participation floor, and per-segment rediscovery so queued
+    retries get fresh cluster assignments every segment."""
+    if n_segments is None:
+        n_segments = 6 if quick else 8
+    return OrchestratorConfig(
+        n_segments=n_segments,
+        iters_per_segment=max(bc.fl_iters // n_segments, bc.tau_a),
+        mode="online", rediscover_every=1,
+        burst_episodes=max(bc.rl_episodes // 4, 50),
+        pipeline=PipelineConfig(
+            rl=RLConfig(n_episodes=bc.rl_episodes, buffer_size=bc.rl_buffer),
+            exchange=ExchangeConfig(apply_channel_failure=True,
+                                    overflow="drop")),
+        fl=FLConfig(tau_a=bc.tau_a, eval_every=bc.eval_every,
+                    batch_size=bc.batch_size, min_participation=0.2),
+        retry=RetryPolicy(enabled=retry, max_attempts=3, backoff_base=1),
+        checkpoint_dir=ckpt_dir)
+
+
+def _run_row(tag, key, xs, ys, ae_cfg, cfg, scn, ev, meta):
+    """One traced + timed orchestrator run; returns its summary row."""
+    obs.enable(manifest=os.path.join("runs", "obs", f"{tag}.jsonl"),
+               meta=meta)
+    with C.Timer() as t, obs.maybe_profile(tag):
+        res = run_orchestrator(key, xs, ys, ae_cfg, cfg, scn, ev)
+    rec = obs.disable()
+    s = res.trace.summary()
+    s["elapsed_us"] = t.elapsed * 1e6
+    s.update(C.phase_attribution(rec["events"]))
+    return s, res
+
+
+def _bit_identical(a, b) -> bool:
+    if a.trace.summary() != b.trace.summary():
+        return False
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a.global_params),
+                        jax.tree.leaves(b.global_params)))
+
+
+def _fault_derived(s: dict, clean_loss: float) -> str:
+    eff = s["effective_delivery"]
+    return (f"final_loss={s['final_loss']:.5f};"
+            f"clean_final_loss={clean_loss:.5f};"
+            f"loss_delta={s['final_loss'] - clean_loss:+.5f};"
+            f"failed_links={s['total_failed_links']};"
+            f"retried={s['total_retried']};"
+            f"retry_delivered={s['total_retry_delivered']};"
+            f"effective_delivery="
+            + (f"{eff:.3f}" if eff is not None else "na")
+            + f";min_available={s['min_available']};"
+            f"moved={s['total_moved']};"
+            + _phase_derived(s)
+            + f";t_faults={s['t_faults']:.3f};"
+            f"t_retry={s['t_retry']:.3f};"
+            f"t_checkpoint={s['t_checkpoint']:.3f}")
+
+
+def faults(quick=True):
+    """Fault-scenario rows: for each fault preset, the faulted run against
+    its clean twin (``faults=None`` — the loss delta is the damage), the
+    retry queue's recovered delivery under ``burst-outage`` (retry on must
+    strictly beat retry off), and a kill+resume bit-identity check under
+    ``preempt-resume``."""
+    bc = (C.BenchConfig(n_clients=8, n_per_class=60, fl_iters=60, tau_a=10,
+                        eval_every=20, rl_episodes=200, rl_buffer=40)
+          if quick else dataclasses.replace(C.BenchConfig.full(),
+                                            fl_iters=800))
+    name = "faults_fmnist"
+    key, xs, ys, ev, ae_cfg = C.make_world(bc, "fmnist")
+    meta = {"bench": name, "dataset": "fmnist", "quick": quick,
+            "config": dataclasses.asdict(bc)}
+    warm = dataclasses.replace(_fault_cfg(bc, quick), n_segments=1,
+                               iters_per_segment=bc.tau_a)
+    run_orchestrator(key, xs, ys, ae_cfg, warm, "static", ev.images)
+
+    out = {}
+    for scn_name in ("burst-outage", "regional-failure"):
+        scn = get_scenario(scn_name)
+        clean = dataclasses.replace(scn, faults=None)
+        s_clean, _ = _run_row(f"{name}__{scn_name}_clean", key, xs, ys,
+                              ae_cfg, _fault_cfg(bc, quick), clean, ev.images,
+                              {**meta, "row": f"{scn_name}/clean"})
+        for retry in (False, True):
+            mode = "retry" if retry else "noretry"
+            cfg = _fault_cfg(bc, quick, retry=retry)
+            s, _ = _run_row(f"{name}__{scn_name}_{mode}", key, xs, ys,
+                            ae_cfg, cfg, scn, ev.images,
+                            {**meta, "row": f"{scn_name}/{mode}"})
+            out[f"{scn_name}/{mode}"] = s
+            print(f"faults_{scn_name}_{mode},{s['elapsed_us']:.0f},"
+                  + _fault_derived(s, s_clean["final_loss"]), flush=True)
+        out[f"{scn_name}/clean"] = s_clean
+        eff_on = out[f"{scn_name}/retry"]["effective_delivery"]
+        eff_off = out[f"{scn_name}/noretry"]["effective_delivery"]
+        if scn_name == "burst-outage" and not (eff_on > eff_off):
+            raise AssertionError(
+                f"retry queue did not improve delivery under {scn_name}: "
+                f"retry on {eff_on} vs off {eff_off}")
+
+    # -- preempt-resume: kill at the scenario's boundary, resume from the
+    #    checkpoint, and require bit-identity with the uninterrupted twin
+    scn = get_scenario("preempt-resume")
+    uncut = dataclasses.replace(
+        scn, faults=dataclasses.replace(scn.faults, preempt_at=None))
+    ck_a = os.path.join("runs", "ckpt", f"{name}_uncut")
+    ck_b = os.path.join("runs", "ckpt", f"{name}_killed")
+    s_ref, res_ref = _run_row(
+        f"{name}__preempt_uncut", key, xs, ys, ae_cfg,
+        _fault_cfg(bc, quick, ckpt_dir=ck_a), uncut, ev.images,
+        {**meta, "row": "preempt-resume/uncut"})
+    cfg = _fault_cfg(bc, quick, ckpt_dir=ck_b)
+    obs.enable(manifest=os.path.join("runs", "obs",
+                                     f"{name}__preempt_resume.jsonl"),
+               meta={**meta, "row": "preempt-resume/killed+resumed"})
+    with C.Timer() as t:
+        try:
+            run_orchestrator(key, xs, ys, ae_cfg, cfg, scn, ev.images)
+            raise RuntimeError("preempt-resume scenario did not preempt")
+        except Preempted as e:
+            res = run_orchestrator(key, xs, ys, ae_cfg, cfg, scn, ev.images,
+                                   resume_from=e.checkpoint)
+    rec = obs.disable()
+    s = res.trace.summary()
+    s["elapsed_us"] = t.elapsed * 1e6
+    s.update(C.phase_attribution(rec["events"]))
+    s["resume_identical"] = _bit_identical(res, res_ref)
+    out["preempt-resume/killed+resumed"] = s
+    out["preempt-resume/uncut"] = s_ref
+    print(f"faults_preempt-resume,{s['elapsed_us']:.0f},"
+          f"resume_identical={s['resume_identical']};"
+          + _fault_derived(s, s_ref["final_loss"]), flush=True)
+    if not s["resume_identical"]:
+        raise AssertionError(
+            "kill+resume diverged from the uninterrupted run")
+    C.save_json(name, out)
+    return out
+
+
+def chaos(quick=True):
+    """CI chaos smoke: ONE tiny preempt-resume row — kill the orchestrator
+    at the scenario's boundary, resume from the checkpoint, and pin
+    bit-identity with the uninterrupted twin on every PR."""
+    bc = C.BenchConfig(n_clients=6, n_per_class=40, fl_iters=30, tau_a=10,
+                       eval_every=30, rl_episodes=80, rl_buffer=20)
+    key, xs, ys, ev, ae_cfg = C.make_world(bc, "fmnist")
+    scn = get_scenario("preempt-resume")
+    uncut = dataclasses.replace(
+        scn, faults=dataclasses.replace(scn.faults, preempt_at=None))
+    meta = {"bench": "chaos_smoke", "dataset": "fmnist", "quick": quick,
+            "config": dataclasses.asdict(bc)}
+    cfg_a = _fault_cfg(bc, quick, n_segments=3,
+                       ckpt_dir=os.path.join("runs", "ckpt", "chaos_uncut"))
+    s_ref, res_ref = _run_row("chaos_smoke__uncut", key, xs, ys, ae_cfg,
+                              cfg_a, uncut, ev.images,
+                              {**meta, "row": "uncut"})
+    cfg_b = dataclasses.replace(
+        cfg_a, checkpoint_dir=os.path.join("runs", "ckpt", "chaos_killed"))
+    obs.enable(manifest=os.path.join("runs", "obs",
+                                     "chaos_smoke__resume.jsonl"),
+               meta={**meta, "row": "killed+resumed"})
+    with C.Timer() as t:
+        try:
+            run_orchestrator(key, xs, ys, ae_cfg, cfg_b, scn, ev.images)
+            raise RuntimeError("preempt-resume scenario did not preempt")
+        except Preempted as e:
+            res = run_orchestrator(key, xs, ys, ae_cfg, cfg_b, scn,
+                                   ev.images, resume_from=e.checkpoint)
+    rec = obs.disable()
+    s = res.trace.summary()
+    s["elapsed_us"] = t.elapsed * 1e6
+    s.update(C.phase_attribution(rec["events"]))
+    identical = _bit_identical(res, res_ref)
+    C.save_json("chaos_smoke", {"uncut": s_ref, "killed+resumed": s,
+                                "resume_identical": identical})
+    print(f"chaos_preempt_resume,{s['elapsed_us']:.0f},"
+          f"resume_identical={identical};"
+          f"final_loss={s['final_loss']:.5f};"
+          f"t_checkpoint={s['t_checkpoint']:.3f};"
+          f"t_faults={s['t_faults']:.3f};"
+          + _phase_derived(s))
+    if not identical:
+        raise AssertionError(
+            "kill+resume diverged from the uninterrupted run")
 
 
 def main(quick=True):

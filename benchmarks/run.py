@@ -40,8 +40,12 @@ BENCHES = {
     "beyond": beyond_paper.main,
     "dynamic": dynamic_scenarios.main,
     "dynamic-smoke": dynamic_scenarios.smoke,   # CI: one tiny online row
+    "faults": dynamic_scenarios.faults,
+    "chaos": dynamic_scenarios.chaos,           # CI: kill+resume identity
     "shard": shard_scaling.main,
 }
+
+CI_ONLY = ("dynamic-smoke", "chaos")
 
 # a result row: bench_name,<int-or-float us>,<derived k=v fields>
 _ROW_RE = re.compile(r"^([A-Za-z][\w.-]*),(\d+(?:\.\d+)?),(.*)$")
@@ -92,7 +96,7 @@ def main() -> None:
             ap.error(f"unknown bench(es) {unknown}; choose from "
                      + ",".join(BENCHES))
     else:
-        names = [n for n in BENCHES if n != "dynamic-smoke"]  # CI-only row
+        names = [n for n in BENCHES if n not in CI_ONLY]  # CI-only rows
 
     tee = _RowTee(sys.stdout) if args.json else None
     if tee is not None:

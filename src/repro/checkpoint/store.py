@@ -3,11 +3,33 @@
 Host-gathered (suitable for the CPU container and single-host TPU runs; a
 real multi-pod deployment would swap in per-shard async writes behind the
 same two functions — the call sites wouldn't change).
+
+Crash safety: :func:`save_pytree` writes to a sibling temp file and
+``os.replace``s it into place, so the path named by a checkpoint is always
+either the previous complete checkpoint or the new complete one — a host
+dying mid-save can never leave a torn file behind the "latest" name.  On
+the read side every loader rejects truncated/corrupt archives and key-set
+or shape drift with :class:`ValueError` (never a bare ``assert``, which
+``python -O`` would strip, and never a ``KeyError`` halfway through a
+restore).
+
+Two loading modes:
+
+  * :func:`load_pytree` — classic ``like``-guided load: the reference tree
+    supplies structure, shapes and dtypes, and the stored key set must
+    match it exactly.
+  * :func:`load_flat` + :func:`restore_subtree` — structure-free load for
+    states whose shapes are only known at runtime (e.g. the orchestrator's
+    run state, where the data cap and metric-trace lengths vary): read the
+    raw ``{key path: array}`` dict, then rebuild the typed sub-pytrees that
+    *do* have a constructible reference (parameter stacks) with
+    ``restore_subtree``.
 """
 from __future__ import annotations
 
 import os
-from typing import Any
+import zipfile
+from typing import Any, Dict
 
 import jax
 import numpy as np
@@ -36,18 +58,103 @@ def _nativize(arr: np.ndarray) -> np.ndarray:
 
 
 def save_pytree(path: str, tree: Any) -> None:
+    """Atomically serialise ``tree`` to ``path``.
+
+    The archive is assembled in ``path + ".tmp"`` (fsynced) and renamed
+    into place, so a crash at any point leaves ``path`` untouched: readers
+    only ever see complete checkpoints.  A stale temp file from an earlier
+    crashed save is overwritten."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {_key_str(p): _nativize(np.asarray(v)) for p, v in flat}
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **arrays)
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def _open_npz(path: str):
+    """np.load with corrupt/truncated archives surfaced as ValueError."""
+    try:
+        return np.load(path)
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, ValueError, OSError, EOFError) as e:
+        raise ValueError(
+            f"corrupt or truncated checkpoint {path!r}: {e} — the atomic "
+            "writer never produces such a file; this is a partial copy or "
+            "external damage") from None
 
 
 def load_pytree(path: str, like: Any) -> Any:
-    with np.load(path) as data:
+    """Load a pytree saved by :func:`save_pytree`, with ``like`` supplying
+    the structure, shapes and dtypes.
+
+    Fails loudly (``ValueError``) on a corrupt archive, on any missing or
+    unexpected key, and on shape drift — never silently and never with a
+    ``python -O``-strippable assert."""
+    with _open_npz(path) as data:
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        expected = [_key_str(p) for p, _ in flat]
+        missing = [k for k in expected if k not in data.files]
+        extra = sorted(set(data.files) - set(expected))
+        if missing or extra:
+            raise ValueError(
+                f"checkpoint {path!r} does not match the reference tree: "
+                f"missing keys {missing or 'none'}, "
+                f"unexpected keys {extra or 'none'}")
         vals = []
-        for p, ref in flat:
-            arr = data[_key_str(p)]
-            assert arr.shape == ref.shape, (p, arr.shape, ref.shape)
+        for (p, ref), k in zip(flat, expected):
+            arr = data[k]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"checkpoint {path!r}: shape mismatch at {k!r}: "
+                    f"stored {tuple(arr.shape)} != expected "
+                    f"{tuple(ref.shape)}")
             vals.append(jax.numpy.asarray(arr, dtype=ref.dtype))
-        return jax.tree_util.tree_unflatten(treedef, [v for v in vals])
+        return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def load_flat(path: str) -> Dict[str, np.ndarray]:
+    """Read a checkpoint as a raw ``{key path: np.ndarray}`` dict.
+
+    No reference tree needed — npz stores shapes and dtypes natively — so
+    this is the entry point for run states whose array shapes are only
+    known to the producer (see module docstring).  The whole archive is
+    materialised eagerly so truncated members fail here, not mid-restore."""
+    with _open_npz(path) as data:
+        try:
+            return {k: data[k] for k in data.files}
+        except (zipfile.BadZipFile, OSError, EOFError, ValueError) as e:
+            raise ValueError(
+                f"corrupt or truncated checkpoint {path!r}: {e}") from None
+
+
+def restore_subtree(flat: Dict[str, np.ndarray], prefix: str, like: Any):
+    """Rebuild ``like``'s pytree from a :func:`load_flat` dict whose keys
+    were saved under ``prefix`` (a subtree of a larger checkpoint).
+
+    ``like`` supplies structure, shapes and dtypes (arrays or
+    ``jax.ShapeDtypeStruct`` leaves).  Missing keys and shape drift raise
+    ``ValueError`` naming the offending path."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    vals = []
+    for p, ref in leaves:
+        sub = _key_str(p)
+        k = f"{prefix}/{sub}" if sub else prefix
+        if k not in flat:
+            raise ValueError(f"checkpoint missing key {k!r} "
+                             f"(restoring subtree {prefix!r})")
+        arr = flat[k]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"checkpoint shape mismatch at {k!r}: stored "
+                f"{tuple(arr.shape)} != expected {tuple(ref.shape)}")
+        vals.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, vals)

@@ -107,3 +107,12 @@ def failure_prob(w, cfg: ChannelConfig = ChannelConfig()):
     p = 1.0 - jnp.exp(-snr_req / w)
     n = w.shape[0]
     return p.at[jnp.arange(n), jnp.arange(n)].set(1.0)  # no self links
+
+
+def degrade_links(p_fail, hit_mask, level):
+    """Raise the failure probability of the links in ``hit_mask`` to at
+    least ``level`` (a burst outage floors them near 1, it never *improves*
+    a link that was already worse).  Shapes broadcast: ``hit_mask`` may be
+    per-link (N, N) or per-transmitter (N,)."""
+    hit = jnp.broadcast_to(jnp.asarray(hit_mask), p_fail.shape)
+    return jnp.where(hit, jnp.maximum(p_fail, level), p_fail)

@@ -116,6 +116,23 @@ class ExchangeResult:
                 apply_channel)
         return self._decisions
 
+    def failed_links(self) -> list:
+        """Live links whose sampled channel failed this round, as host
+        ``(rx, tx)`` pairs — the orchestrator's retry queue feeds on this.
+        Empty when the channel wasn't sampled.  Syncs via ``np.asarray``
+        (not ``jax.device_get``), and only the tiny (N,) fail mask — client
+        data stays on device and the one-transfer-per-run metrics contract
+        is untouched."""
+        if self.fail is not None and self._ctx is not None:  # batched plane
+            in_edge = np.asarray(self._ctx[2])
+            fail = np.asarray(self.fail)
+            live = in_edge != np.arange(in_edge.shape[0])
+            return [(int(i), int(in_edge[i]))
+                    for i in np.nonzero(fail & live)[0]]
+        if self._decisions is not None:                      # loop plane
+            return [(d[0], d[1]) for d in self._decisions if d[2] == -1]
+        return []
+
 
 # ---------------------------------------------------------------------------
 # AE pretraining (paper Sec. III-B: one full-batch GD iteration per client)

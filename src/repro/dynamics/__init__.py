@@ -9,10 +9,14 @@ and ``metrics.py`` for the per-segment trace.
 """
 from repro.dynamics.environment import (EnvState, env_init, env_step,  # noqa: F401
                                         stragglers_from)
-from repro.dynamics.metrics import SegmentRecord, Trace  # noqa: F401
-from repro.dynamics.orchestrator import (MODES, OrchestratorConfig,  # noqa: F401
+from repro.dynamics.metrics import (PendingSegment, SegmentRecord,  # noqa: F401
+                                    Trace)
+from repro.dynamics.orchestrator import (CHECKPOINT_NAME, MODES,  # noqa: F401
+                                         OrchestratorConfig,
                                          OrchestratorResult,
                                          run_orchestrator)
+from repro.dynamics.runstate import (RunState, load_run_state,  # noqa: F401
+                                     save_run_state)
 from repro.dynamics.scenarios import (ScenarioConfig,  # noqa: F401
                                       available_scenarios, get_scenario,
                                       register_scenario)

@@ -15,7 +15,7 @@ Three quantities tell the story of a dynamic deployment:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, NamedTuple, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -38,6 +38,28 @@ class SegmentRecord:
         default_factory=lambda: np.zeros(0, np.int64))
     eval_curve: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0))
+    # fault/retry plane (zero on fault-free runs)
+    n_live: int = 0                  # live links the exchange committed to
+    n_failed: int = 0                # of those, sampled channel failures
+    retried: int = 0                 # queued links re-offered this segment
+    retry_delivered: int = 0         # of those, delivered on the retry
+
+
+class PendingSegment(NamedTuple):
+    """One segment's metrics before materialisation: ``dev`` holds deferred
+    device scalars/arrays, the rest is host metadata known synchronously.
+    The orchestrator accumulates these and converts them to
+    :class:`SegmentRecord` in a single end-of-run transfer; the checkpoint
+    layer persists them (dev values materialised) so a resumed run replays
+    the completed segments' records bit-identically."""
+    segment: int
+    rediscovered: bool
+    sampled: bool                  # did the exchange sample the channel?
+    host_realized: Optional[float]  # loop-plane fallback (already host)
+    eval_iters: np.ndarray
+    dev: dict
+    retried: int = 0
+    retry_delivered: int = 0
 
 
 def link_churn(prev_edge, in_edge) -> float:
@@ -144,6 +166,9 @@ class Trace:
         segs = self.segments
         realized = [s.realized_delivery for s in segs
                     if s.realized_delivery is not None]
+        n_live = sum(s.n_live for s in segs)
+        n_failed = sum(s.n_failed for s in segs)
+        retry_delivered = sum(s.retry_delivered for s in segs)
         return {
             "n_segments": len(segs),
             "final_loss": float(segs[-1].eval_loss) if segs else float("nan"),
@@ -157,4 +182,13 @@ class Trace:
             "n_rediscoveries": int(sum(s.rediscovered for s in segs)),
             "min_available": int(min((s.n_available for s in segs),
                                      default=0)),
+            # fault/retry plane: of every live link the run committed to,
+            # what fraction ultimately delivered — first try or on a retry
+            # (the resilience number the retry queue is judged by)
+            "total_failed_links": int(n_failed),
+            "total_retried": int(sum(s.retried for s in segs)),
+            "total_retry_delivered": int(retry_delivered),
+            "effective_delivery": (
+                float((n_live - n_failed + retry_delivered) / n_live)
+                if n_live else None),
         }

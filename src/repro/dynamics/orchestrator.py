@@ -42,10 +42,23 @@ Determinism contract (tested in ``tests/test_dynamics_parity.py``): under
 the ``static`` scenario with mode ``"oneshot"``, the run is bit-for-bit
 ``run_pipeline(k_pipe) + fl_train(k_fl)`` where
 ``k_pipe, k_env, k_fl = jax.random.split(key, 3)``.
+
+Fault tolerance (``repro.faults``): a scenario may carry a declarative
+:class:`~repro.faults.FaultPlan` — crash pulses, regional outages, link
+bursts, simulated preemption — which the orchestrator overlays onto the
+environment deterministically (the fault key is ``fold_in(k_env, salt)``,
+so fault-free runs keep their exact key stream).  With
+``cfg.checkpoint_dir`` set, the full run state is persisted atomically at
+segment boundaries (:mod:`repro.dynamics.runstate`) and a killed run
+resumes **bit-identical** via ``run_orchestrator(..., resume_from=path)``.
+With ``cfg.retry.enabled``, failed exchange transfers re-offer through a
+bounded backoff queue instead of being dropped (retries ride the
+re-discovery cadence — they need fresh cluster assignments).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import NamedTuple, Optional
 
 import jax
@@ -60,13 +73,24 @@ from repro.core.pipeline import (PipelineConfig, cluster_clients,
                                  link_rewards, run_pipeline,
                                  split_pipeline_keys)
 from repro.dynamics.environment import env_init, env_step
-from repro.dynamics.metrics import (SegmentRecord, Trace,
+from repro.dynamics.metrics import (PendingSegment, SegmentRecord, Trace,
                                     delivery_stats_dev, link_churn_dev,
                                     realized_delivery, realized_delivery_dev)
+from repro.dynamics.runstate import RunState, load_run_state, save_run_state
 from repro.dynamics.scenarios import get_scenario
+from repro.faults import (Preempted, RetryPolicy, apply_availability,
+                          apply_pfail)
+from repro.faults.retry import RetryQueue
 from repro.fl.trainer import FLConfig, eval_global_loss, fl_train
 
 MODES = ("oneshot", "online", "uniform")
+
+# salt separating the fault plane's key stream from the env process; the
+# run's own split (k_pipe, k_env, k_fl) is untouched, so fault-free runs
+# are bit-identical to the pre-fault-plane runtime
+_FAULT_SALT = 0xFA
+
+CHECKPOINT_NAME = "ckpt_latest.npz"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,10 +106,20 @@ class OrchestratorConfig:
     fl: FLConfig = dataclasses.field(default_factory=FLConfig)
     # fl.total_iters is derived (n_segments * iters_per_segment); the field
     # in `fl` is ignored so presets can share one FLConfig.
+    # fault-tolerance plane (all off by default):
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    checkpoint_dir: Optional[str] = None   # None = no checkpointing
+    checkpoint_every: int = 1              # segments between checkpoints
 
     @property
     def total_iters(self) -> int:
         return self.n_segments * self.iters_per_segment
+
+    @property
+    def checkpoint_path(self) -> Optional[str]:
+        if self.checkpoint_dir is None:
+            return None
+        return os.path.join(self.checkpoint_dir, CHECKPOINT_NAME)
 
 
 class OrchestratorResult(NamedTuple):
@@ -127,27 +161,23 @@ def _rediscover(key, cd, trust, p_fail, cfg: OrchestratorConfig,
     return graph.in_edge, graph.state, assigns
 
 
-class _PendingSegment(NamedTuple):
-    """One segment's metrics before materialisation: ``dev`` holds deferred
-    device scalars/arrays, the rest is host metadata known synchronously."""
-    segment: int
-    rediscovered: bool
-    sampled: bool                  # did the exchange sample the channel?
-    host_realized: Optional[float]  # loop-plane fallback (already host)
-    eval_iters: np.ndarray
-    dev: dict
-
-
 def run_orchestrator(key, datasets, labels, ae_cfg,
                      cfg: OrchestratorConfig = OrchestratorConfig(),
                      scenario="static", eval_data=None,
-                     rules=None) -> OrchestratorResult:
+                     rules=None, resume_from=None) -> OrchestratorResult:
     """Simulate a deployment: ``cfg.n_segments`` FL segments over an
     evolving environment (see module docstring for the protocol).
 
     ``datasets``/``labels`` may be ragged per-client lists or one
     :class:`~repro.core.batching.ClientData` (as ``datasets``, with
-    ``labels=None``)."""
+    ``labels=None``).
+
+    ``resume_from``: path of a run-state checkpoint written by a previous
+    (killed) invocation with ``cfg.checkpoint_dir`` set.  The call must
+    pass the *same* key, configs, scenario and eval data; the run skips
+    the completed segments and continues bit-identically to the
+    uninterrupted run.  A resumed run ignores the scenario's
+    ``preempt_at`` (otherwise it would re-preempt forever)."""
     if cfg.mode not in MODES:
         raise ValueError(f"unknown mode {cfg.mode!r}; expected one of {MODES}")
     if eval_data is None:
@@ -162,48 +192,91 @@ def run_orchestrator(key, datasets, labels, ae_cfg,
             "windows)")
     scn = get_scenario(scenario)
     with obs.span("orchestrator", mode=cfg.mode, scenario=scn.name,
-                  n_segments=cfg.n_segments):
+                  n_segments=cfg.n_segments, resumed=resume_from is not None):
         return _orchestrate(key, datasets, labels, ae_cfg, cfg, scn,
-                            eval_data, rules)
+                            eval_data, rules, resume_from)
 
 
 def _orchestrate(key, datasets, labels, ae_cfg, cfg: OrchestratorConfig,
-                 scn, eval_data, rules) -> OrchestratorResult:
+                 scn, eval_data, rules, resume_from=None) -> OrchestratorResult:
     k_pipe, k_env, k_fl = jax.random.split(key, 3)
-    n = len(datasets) if isinstance(datasets, (list, tuple)) else \
-        datasets.n_clients
+    plan = scn.faults
+    k_fault = (jax.random.fold_in(k_env, _FAULT_SALT)
+               if plan is not None else None)
     pcfg = cfg.pipeline
     flcfg = dataclasses.replace(cfg.fl, total_iters=cfg.total_iters)
+    ckpt_path = cfg.checkpoint_path
 
-    # The environment owns the channel; seeding it with the pipeline's
-    # channel sub-key makes segment 0's RSS the one-shot draw bit-for-bit.
-    env = env_init(split_pipeline_keys(k_pipe).k_ch, n, pcfg.channel, scn)
+    retry_q = RetryQueue()
+    if resume_from is not None:
+        with obs.span("checkpoint-load"):
+            rs = load_run_state(resume_from, ae_cfg, cfg.n_segments,
+                                cfg.iters_per_segment)
+        if not np.array_equal(np.asarray(rs.key), np.asarray(key)):
+            raise ValueError(
+                "resume key mismatch: the checkpoint was written by a run "
+                "with a different PRNG key — resuming would silently "
+                "diverge from the original run")
+        env, cd, trust = rs.env, rs.cd, rs.trust
+        in_edge, prev_edge, p_fail = rs.in_edge, rs.prev_edge, rs.p_fail
+        rl_state, carry, retry_q = rs.rl_state, rs.carry, rs.retry
+        pending = list(rs.pending)
+        exch = None
+        start_segment = rs.segment + 1
+    else:
+        n = len(datasets) if isinstance(datasets, (list, tuple)) else \
+            datasets.n_clients
+        # The environment owns the channel; seeding it with the pipeline's
+        # channel sub-key makes segment 0's RSS the one-shot draw
+        # bit-for-bit.  (The fault plane leaves segment 0 untouched by
+        # construction: its windows overlay env_step, which first runs at
+        # segment 1 — segment 0's channel/availability feed run_pipeline.)
+        env = env_init(split_pipeline_keys(k_pipe).k_ch, n, pcfg.channel,
+                       scn)
 
-    init_edge = None
-    if cfg.mode == "uniform":
-        # same convention as the one-shot uniform baseline (benchmarks)
-        init_edge = ql.uniform_graph(jax.random.fold_in(k_pipe, 7), n)
-    pipe = run_pipeline(k_pipe, datasets, labels, ae_cfg, pcfg,
-                        in_edge=init_edge, rss=env.rss, rules=rules)
+        init_edge = None
+        if cfg.mode == "uniform":
+            # same convention as the one-shot uniform baseline (benchmarks)
+            init_edge = ql.uniform_graph(jax.random.fold_in(k_pipe, 7), n)
+        pipe = run_pipeline(k_pipe, datasets, labels, ae_cfg, pcfg,
+                            in_edge=init_edge, rss=env.rss, rules=rules)
 
-    cd = pipe.client_data          # the device-resident client plane
-    trust = pipe.trust
-    in_edge = pipe.in_edge
-    rl_state = pipe.graph.state
-    p_fail = pipe.p_fail
-    exch = pipe.exchange
+        cd = pipe.client_data          # the device-resident client plane
+        trust = pipe.trust
+        in_edge = pipe.in_edge
+        rl_state = pipe.graph.state
+        p_fail = pipe.p_fail
+        exch = pipe.exchange
 
-    pending: list[_PendingSegment] = []
-    carry = None
-    prev_edge = None
-    for s in range(cfg.n_segments):
+        pending = []
+        carry = None
+        prev_edge = None
+        start_segment = 0
+
+    n = int(env.available.shape[0])
+    for s in range(start_segment, cfg.n_segments):
+        if (plan is not None and plan.preempt_at == s
+                and resume_from is None):
+            # simulated host preemption at the segment boundary: the
+            # previous segment's checkpoint (if enabled) is already on disk
+            raise Preempted(s, ckpt_path)
         with obs.span("segment", segment=s):
             rediscovered = s == 0
+            assigns = None
             if s > 0:
                 with obs.span("env-step", segment=s):
                     env = env_step(jax.random.fold_in(k_env, s), env, scn,
                                    pcfg.channel)
                     p_fail = failure_prob(env.rss, pcfg.channel)
+                if plan is not None:
+                    # deterministic fault overlay; the op sequence is
+                    # identical every segment (windows enter as array
+                    # constants), keeping steady-state segments compile-free
+                    with obs.span("fault-inject", segment=s,
+                                  events=",".join(plan.active(s)) or "none"):
+                        env = env._replace(available=apply_availability(
+                            k_fault, plan, s, env.positions, env.available))
+                        p_fail = apply_pfail(k_fault, plan, s, p_fail)
                 exch = None
                 if cfg.mode != "oneshot" and s % cfg.rediscover_every == 0:
                     new_edge, rl_state, assigns = _rediscover(
@@ -219,6 +292,18 @@ def _orchestrate(key, datasets, labels, ae_cfg, cfg: OrchestratorConfig,
                     prev_edge, in_edge = in_edge, new_edge
                     rediscovered = True
 
+            retried = retry_delivered = 0
+            retry_moved = jnp.zeros((), jnp.int32)
+            if cfg.retry.enabled:
+                if exch is not None:
+                    retry_q.offer(s, exch.failed_links(), cfg.retry)
+                if assigns is not None and len(retry_q):
+                    cd, retry_moved, retried, retry_delivered = \
+                        _retry_exchange(
+                            jax.random.fold_in(k_pipe, 300 + s), s, cd,
+                            assigns, trust, p_fail, ae_cfg, cfg, retry_q,
+                            rules)
+
             with obs.span("fl-segment", segment=s):
                 fl = fl_train(k_fl, cd, ae_cfg, flcfg, eval_data,
                               avail_mask=env.available, init_carry=carry,
@@ -231,9 +316,14 @@ def _orchestrate(key, datasets, labels, ae_cfg, cfg: OrchestratorConfig,
                        and exch is not None)
             realized_dev = jnp.nan
             host_realized = None
+            n_live_dev = n_failed_dev = jnp.zeros((), jnp.int32)
             if sampled:
                 if exch.fail is not None:   # batched plane: stay on device
                     realized_dev = realized_delivery_dev(in_edge, exch.fail)
+                    live = jnp.asarray(in_edge) != jnp.arange(n)
+                    n_live_dev = jnp.sum(live.astype(jnp.int32))
+                    n_failed_dev = jnp.sum(
+                        (jnp.asarray(exch.fail) & live).astype(jnp.int32))
                 else:                       # loop plane: host decisions
                     host_realized = realized_delivery(in_edge,
                                                       exch.gate_decisions)
@@ -241,10 +331,11 @@ def _orchestrate(key, datasets, labels, ae_cfg, cfg: OrchestratorConfig,
             seg_loss = (fl.eval_loss[-1] if fl.eval_loss.size else
                         eval_global_loss(carry.global_params, eval_data,
                                          ae_cfg))
-            pending.append(_PendingSegment(
+            pending.append(PendingSegment(
                 segment=s, rediscovered=rediscovered, sampled=sampled,
                 host_realized=host_realized,
                 eval_iters=np.asarray(fl.eval_iters),
+                retried=retried, retry_delivered=retry_delivered,
                 dev={
                     "eval_loss": seg_loss,
                     "in_edge": jnp.asarray(in_edge),
@@ -255,14 +346,31 @@ def _orchestrate(key, datasets, labels, ae_cfg, cfg: OrchestratorConfig,
                     "expected_delivery": expected_dev,
                     "n_available": jnp.sum(env.available),
                     "moved": (jnp.sum(exch.moved_dev) if exch is not None
-                              else jnp.zeros((), jnp.int32)),
+                              else jnp.zeros((), jnp.int32)) + retry_moved,
                     "realized": realized_dev,
                     "eval_curve": fl.eval_loss,
+                    "n_live": n_live_dev,
+                    "n_failed": n_failed_dev,
                 }))
+
+            if ckpt_path is not None and (
+                    (s + 1) % cfg.checkpoint_every == 0
+                    or s == cfg.n_segments - 1):
+                # persists *before* the next segment's fl_train donates the
+                # carry buffers (save materialises them to host first)
+                with obs.span("checkpoint-save", segment=s):
+                    save_run_state(ckpt_path, RunState(
+                        segment=s, key=np.asarray(key), env=env, cd=cd,
+                        trust=trust, in_edge=in_edge, prev_edge=prev_edge,
+                        p_fail=p_fail, rl_state=rl_state, carry=carry,
+                        retry=retry_q, pending=pending),
+                        cfg.n_segments, cfg.iters_per_segment)
 
     # One host transfer for every per-segment metric of the whole run: the
     # loop above never blocked on a device value.  (The transfer counter
-    # pins this contract: tests assert exactly one device_get per run.)
+    # pins this contract: tests assert exactly one device_get per run.
+    # Restored segments' dev values are already host arrays and pass
+    # through unchanged — a resumed run replays them bit-identically.)
     with obs.span("metrics-materialize"):
         host = jax.device_get([p.dev for p in pending])
     trace = Trace()
@@ -280,9 +388,47 @@ def _orchestrate(key, datasets, labels, ae_cfg, cfg: OrchestratorConfig,
             n_available=int(h["n_available"]),
             moved=int(h["moved"]), rediscovered=p.rediscovered,
             eval_iters=p.eval_iters,
-            eval_curve=np.asarray(h["eval_curve"])))
+            eval_curve=np.asarray(h["eval_curve"]),
+            n_live=int(h["n_live"]), n_failed=int(h["n_failed"]),
+            retried=p.retried, retry_delivered=p.retry_delivered))
 
     return OrchestratorResult(trace, carry.global_params, carry, in_edge,
                               env, cd.data_list(), cd.label_list(),
                               trace.eval_curve_iters, trace.eval_curve,
                               cd)
+
+
+def _retry_exchange(key, s, cd, assigns, trust, p_fail, ae_cfg,
+                    cfg: OrchestratorConfig, retry_q: RetryQueue, rules):
+    """Re-offer the due failed links through the standard exchange program.
+
+    The retry edge maps each due receiver to its original transmitter and
+    everyone else to themselves (a self-link is a no-op for the device
+    gate), so the retry reuses the exact jit cache of the per-segment
+    re-exchange — same statics, no new compiles under ``overflow="drop"``.
+    A retried transfer faces the *current* channel and the receiver's
+    current gate; delivery means the channel held (the gate may still
+    decline the payload — that is a receiver decision, not a lost link)."""
+    due = retry_q.take_due(s)
+    if not due:
+        return cd, jnp.zeros((), jnp.int32), 0, 0
+    with obs.span("retry-exchange", segment=s, n_links=len(due)):
+        n = cd.n_clients
+        retry_edge = np.arange(n)
+        for e in due:
+            retry_edge[e.rx] = e.tx
+        r_exch = ex.run_exchange(key, cd, None, assigns, trust,
+                                 jnp.asarray(retry_edge), p_fail, ae_cfg,
+                                 cfg.pipeline.exchange, rules=rules)
+        # the (N,) fail sync is np.asarray-based (failed_links), keeping
+        # the one-device_get-per-run metrics contract intact
+        failed = set(r_exch.failed_links())
+        delivered = 0
+        for e in due:
+            ok = (e.rx, e.tx) not in failed
+            retry_q.resolve(s, e, ok, cfg.retry)
+            delivered += int(ok)
+        obs.mark("retry-outcome", segment=s, offered=len(due),
+                 delivered=delivered, still_queued=len(retry_q))
+        return (r_exch.client_data, jnp.sum(r_exch.moved_dev), len(due),
+                delivered)

@@ -1,0 +1,210 @@
+"""Orchestrator run-state checkpointing: everything a federation needs to
+survive process death.
+
+One :class:`RunState` captures the full cross-segment state of
+``run_orchestrator`` at a segment boundary — PRNG run key, environment
+(:class:`~repro.dynamics.environment.EnvState`), the device-resident
+:class:`~repro.core.batching.ClientData` stack, trust matrices, graph
+(current + previous edge), warm RL state, the FL carry (params + Adam
+moments + step), the retry queue, and every completed segment's deferred
+metrics (:class:`~repro.dynamics.metrics.PendingSegment`, dev values
+materialised).  :func:`save_run_state` lays it out as one flat atomic npz
+via :mod:`repro.checkpoint.store`; :func:`load_run_state` rebuilds it.
+
+Bit-identity contract (pinned by ``tests/test_faults_resume.py``): a run
+killed at any segment boundary and resumed from the latest checkpoint
+produces the same final eval loss, trust graph, delivery metrics and
+global parameters as the uninterrupted run, to the bit.  What makes that
+hold:
+
+  * every per-segment PRNG key is *derived* (``fold_in``) from the stored
+    run key, never advanced statefully — resuming re-derives the exact
+    key the uninterrupted run would have used at each segment;
+  * all checkpointed arrays are f32/int/bool, which round-trip npz
+    exactly (the store widens any non-native dtype to f32);
+  * completed segments' metrics are persisted already-materialised, so the
+    final metrics transfer sees the same values the uninterrupted run's
+    single ``device_get`` would have produced.
+
+Array shapes here are runtime-quantities (data cap, eval-curve lengths,
+retry-queue depth), so loading goes through the store's structure-free
+:func:`~repro.checkpoint.store.load_flat`; only the parameter pytrees —
+whose structure is derivable from ``AEConfig`` — are rebuilt through the
+shape-checked :func:`~repro.checkpoint.store.restore_subtree`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import load_flat, restore_subtree, save_pytree
+from repro.core import qlearning as ql
+from repro.core.batching import ClientData
+from repro.dynamics.environment import EnvState
+from repro.dynamics.metrics import PendingSegment
+from repro.faults.retry import RetryQueue
+from repro.fl.trainer import FLCarry
+from repro.models import autoencoder as ae
+
+_VERSION = 1
+
+# the deferred device metrics every segment carries (metrics.PendingSegment
+# dev dict); fixed so checkpoints have a stable, checkable key set
+DEV_KEYS = ("eval_loss", "in_edge", "link_churn", "mean_pfail",
+            "expected_delivery", "n_available", "moved", "realized",
+            "eval_curve", "n_live", "n_failed")
+
+
+@dataclasses.dataclass
+class RunState:
+    """Cross-segment orchestrator state at the end of segment ``segment``."""
+    segment: int                     # last completed segment
+    key: np.ndarray                  # the run key (authoritative on resume)
+    env: EnvState
+    cd: ClientData
+    trust: List[np.ndarray]
+    in_edge: object
+    prev_edge: Optional[object]
+    p_fail: object
+    rl_state: Optional[ql.RLState]
+    carry: FLCarry
+    retry: RetryQueue
+    pending: List[PendingSegment]
+
+
+def save_run_state(path: str, rs: RunState, n_segments: int,
+                   iters_per_segment: int) -> None:
+    """Atomically persist ``rs``; also records the run geometry so a resume
+    under a different config fails loudly instead of diverging silently."""
+    tree = {
+        "meta": {
+            "version": _VERSION,
+            "segment": rs.segment,
+            "n_segments": n_segments,
+            "iters_per_segment": iters_per_segment,
+            "n_trust": len(rs.trust),
+            "n_pending": len(rs.pending),
+            "has_labels": int(rs.cd.labels is not None),
+            "has_prev_edge": int(rs.prev_edge is not None),
+            "has_rl": int(rs.rl_state is not None),
+        },
+        "key": np.asarray(rs.key),
+        "env": dict(zip(EnvState._fields, rs.env)),
+        "cd": {"data": rs.cd.data, "sizes": rs.cd.sizes},
+        "trust": {str(i): t for i, t in enumerate(rs.trust)},
+        "in_edge": rs.in_edge,
+        "p_fail": rs.p_fail,
+        "carry": dict(zip(FLCarry._fields, rs.carry)),
+        "retry": rs.retry.to_array(),
+        "pending": {str(i): _pending_tree(p)
+                    for i, p in enumerate(rs.pending)},
+    }
+    if rs.cd.labels is not None:
+        tree["cd"]["labels"] = rs.cd.labels
+    if rs.prev_edge is not None:
+        tree["prev_edge"] = rs.prev_edge
+    if rs.rl_state is not None:
+        tree["rl"] = dict(zip(ql.RLState._fields, rs.rl_state))
+    save_pytree(path, tree)
+
+
+def _pending_tree(p: PendingSegment) -> dict:
+    return {
+        "segment": p.segment,
+        "rediscovered": int(p.rediscovered),
+        "sampled": int(p.sampled),
+        # NaN = None (a realized rate is in [0, 1], NaN is unreachable)
+        "host_realized": np.float64(np.nan if p.host_realized is None
+                                    else p.host_realized),
+        "eval_iters": np.asarray(p.eval_iters),
+        "retried": p.retried,
+        "retry_delivered": p.retry_delivered,
+        "dev": {k: np.asarray(p.dev[k]) for k in DEV_KEYS},
+    }
+
+
+def _params_like(ae_cfg, n: int):
+    """ShapeDtypeStruct references for the FL carry's parameter pytrees —
+    global (one replica) and client-stacked (leading N axis).  init_ae's
+    *structure* is key-independent, so eval_shape gives the exact pytree
+    the run held without materialising anything."""
+    g = jax.eval_shape(lambda k: ae.init_ae(k, ae_cfg),
+                       jax.random.PRNGKey(0))
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), g)
+    return g, stacked
+
+
+def load_run_state(path: str, ae_cfg, n_segments: int,
+                   iters_per_segment: int) -> RunState:
+    """Rebuild a :class:`RunState` from :func:`save_run_state`'s archive.
+
+    Raises ``ValueError`` on corrupt/truncated archives (via the store), on
+    a checkpoint from a different run geometry, and on parameter-shape
+    drift vs ``ae_cfg``."""
+    flat = load_flat(path)
+    version = int(flat["meta/version"])
+    if version != _VERSION:
+        raise ValueError(f"checkpoint {path!r} has version {version}, "
+                         f"this runtime reads version {_VERSION}")
+    for name, want in (("n_segments", n_segments),
+                       ("iters_per_segment", iters_per_segment)):
+        got = int(flat[f"meta/{name}"])
+        if got != want:
+            raise ValueError(
+                f"checkpoint {path!r} was written by a run with "
+                f"{name}={got}, resuming with {name}={want} would diverge")
+
+    env = EnvState(*(jnp.asarray(flat[f"env/{f}"])
+                     for f in EnvState._fields))
+    labels = (jnp.asarray(flat["cd/labels"])
+              if int(flat["meta/has_labels"]) else None)
+    cd = ClientData(jnp.asarray(flat["cd/data"]),
+                    jnp.asarray(flat["cd/sizes"]), labels)
+    trust = [flat[f"trust/{i}"] for i in range(int(flat["meta/n_trust"]))]
+
+    rl_state = None
+    if int(flat["meta/has_rl"]):
+        rl_state = ql.RLState(*(jnp.asarray(flat[f"rl/{f}"])
+                                for f in ql.RLState._fields))
+
+    g_like, c_like = _params_like(ae_cfg, cd.n_clients)
+    carry = FLCarry(
+        client_params=restore_subtree(flat, "carry/client_params", c_like),
+        global_params=restore_subtree(flat, "carry/global_params", g_like),
+        mu=restore_subtree(flat, "carry/mu", c_like),
+        nu=restore_subtree(flat, "carry/nu", c_like),
+        step=jnp.asarray(flat["carry/step"]))
+
+    pending = []
+    for i in range(int(flat["meta/n_pending"])):
+        pre = f"pending/{i}"
+        hr = float(flat[f"{pre}/host_realized"])
+        pending.append(PendingSegment(
+            segment=int(flat[f"{pre}/segment"]),
+            rediscovered=bool(int(flat[f"{pre}/rediscovered"])),
+            sampled=bool(int(flat[f"{pre}/sampled"])),
+            host_realized=None if np.isnan(hr) else hr,
+            eval_iters=flat[f"{pre}/eval_iters"],
+            # already-materialised host values: they flow through the final
+            # metrics transfer unchanged, replaying the completed segments'
+            # records bit-identically
+            dev={k: flat[f"{pre}/dev/{k}"] for k in DEV_KEYS},
+            retried=int(flat[f"{pre}/retried"]),
+            retry_delivered=int(flat[f"{pre}/retry_delivered"])))
+
+    return RunState(
+        segment=int(flat["meta/segment"]),
+        key=flat["key"],
+        env=env, cd=cd, trust=trust,
+        in_edge=jnp.asarray(flat["in_edge"]),
+        prev_edge=(jnp.asarray(flat["prev_edge"])
+                   if int(flat["meta/has_prev_edge"]) else None),
+        p_fail=jnp.asarray(flat["p_fail"]),
+        rl_state=rl_state, carry=carry,
+        retry=RetryQueue.from_array(flat["retry"]),
+        pending=pending)

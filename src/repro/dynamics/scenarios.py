@@ -25,13 +25,35 @@ arXiv 2404.09861):
     Only a third of the fleet is online at the start; the rest arrive in
     waves over the first segments — availability ramps to 100%.
 
+A scenario may additionally carry a :class:`~repro.faults.FaultPlan`
+(``faults``): declarative crash pulses, correlated regional outages, burst
+link outages and simulated host preemption that the orchestrator overlays
+onto the environment process deterministically (see :mod:`repro.faults`).
+Three fault presets ship built-in:
+
+``burst-outage``
+    Fading channel + a 2-segment burst knocking out 60% of D2D links
+    (failure probability floored at 0.97) — the regime where the retry
+    queue earns its keep.
+``regional-failure``
+    i.i.d. churn + a 2-segment regional blackout (every device near
+    (0.3, 0.3) goes dark) followed by a 30% crash pulse — correlated
+    availability loss beyond what churn models.
+``preempt-resume``
+    Fading channel + simulated host preemption at segment 2: the
+    orchestrator raises :class:`~repro.faults.Preempted` there, and the
+    chaos tests/CI resume it from the latest checkpoint bit-identically.
+
 ``register_scenario`` adds new presets (e.g. from experiments) without
 touching this module.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
+
+from repro.faults.plan import (CrashPulse, FaultPlan, LinkBurst,
+                               RegionalOutage)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +68,8 @@ class ScenarioConfig:
     flash_crowd: bool = False    # staged arrival instead of i.i.d. churn
     flash_initial_frac: float = 0.34   # fraction online at t=0
     flash_ramp_segments: int = 3       # segments until everyone is online
+    # deterministic fault overlay (None = fault-free)
+    faults: Optional[FaultPlan] = None
 
     @property
     def channel_is_static(self) -> bool:
@@ -83,3 +107,20 @@ register_scenario(ScenarioConfig("mobility", fading_rho=0.9,
                                  fading_sigma=0.3, mobility_step=0.12))
 register_scenario(ScenarioConfig("churn", churn_prob=0.25))
 register_scenario(ScenarioConfig("flash-crowd", flash_crowd=True))
+
+# Fault presets (see module docstring).  Windows start at segment 1: the
+# fault plane overlays the *evolving* environment, and segment 0's channel
+# and availability are the pipeline's initial draw by construction.
+register_scenario(ScenarioConfig(
+    "burst-outage", fading_rho=0.9, fading_sigma=0.3,
+    faults=FaultPlan(link_bursts=(
+        LinkBurst(start=1, duration=2, frac=0.6, p_fail=0.97),))))
+register_scenario(ScenarioConfig(
+    "regional-failure", churn_prob=0.1,
+    faults=FaultPlan(
+        regions=(RegionalOutage(start=1, duration=2,
+                                center=(0.3, 0.3), radius=0.4),),
+        crashes=(CrashPulse(start=3, duration=1, frac=0.3),))))
+register_scenario(ScenarioConfig(
+    "preempt-resume", fading_rho=0.7, fading_sigma=0.6,
+    faults=FaultPlan(preempt_at=2)))

@@ -1,0 +1,17 @@
+"""Deterministic fault plane for the federation runtime.
+
+Declarative fault plans (:mod:`repro.faults.plan`), their seeded
+realisation onto availability and link state (:mod:`repro.faults.inject`),
+and the bounded retry queue that stops failed D2D transfers from being
+silently dropped (:mod:`repro.faults.retry`).  See each module's docstring
+for the determinism and compile-freeness contracts.
+"""
+from repro.faults.plan import (CrashPulse, FaultPlan, LinkBurst, Preempted,
+                               RegionalOutage)
+from repro.faults.inject import apply_availability, apply_pfail
+from repro.faults.retry import RetryPolicy, RetryQueue
+
+__all__ = [
+    "CrashPulse", "FaultPlan", "LinkBurst", "Preempted", "RegionalOutage",
+    "apply_availability", "apply_pfail", "RetryPolicy", "RetryQueue",
+]

@@ -1,0 +1,87 @@
+"""Deterministic realisation of fault plans onto the environment state.
+
+Two entry points, both pure functions of ``(key, plan, segment, ...)``:
+
+  * :func:`apply_availability` — overlays crash pulses and regional
+    outages onto the availability mask drawn by the environment process,
+  * :func:`apply_pfail` — overlays link bursts onto the channel's failure
+    probability matrix.
+
+Determinism contract: every random victim set is drawn from
+``fold_in(fold_in(key, SALT), event.start)`` — a function of the run key
+and the event's *start* segment only.  Consequences the tests pin:
+
+  * the same clients stay down for a pulse's whole window (a crash is a
+    crash, not per-segment re-rolling),
+  * a run resumed from a checkpoint re-derives exactly the victim sets the
+    uninterrupted run saw (bit-identical resume), and
+  * two events of the same kind starting at different segments get
+    independent draws.
+
+Compile-freeness contract: the overlays execute the *same* eager op
+sequence every segment — event windows enter as 0/1 array constants
+(``jnp.asarray(event.active(segment), ...)``) multiplied into the masks,
+never as Python branches that would change the op stream between segments.
+XLA:CPU caches eager dispatch by op signature, so after the first segment
+the fault plane adds zero compiles — the obs plane's "segments >= 2
+compile nothing" contract holds on faulted runs too (pinned in
+``tests/test_faults_resume.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import degrade_links
+from repro.faults.plan import FaultPlan
+
+# Salts separating the fault plane's key streams from each other (the
+# orchestrator already separates the fault key itself from the env/FL/pipe
+# keys via fold_in).
+_SALT_CRASH = 0x0FA1
+_SALT_BURST = 0x0FA2
+
+
+def _event_key(key, salt: int, start: int):
+    return jax.random.fold_in(jax.random.fold_in(key, salt), start)
+
+
+def apply_availability(key, plan: FaultPlan, segment: int, positions, avail):
+    """Overlay the plan's crash pulses and regional outages onto ``avail``.
+
+    ``positions`` is the environment's (N, 2) device-position state (used
+    by regional outages); ``avail`` the (N,) boolean availability drawn by
+    the scenario process.  Returns the faulted (N,) mask, with a
+    deterministic floor of one live client (client 0 if the faults would
+    otherwise empty the fleet — mirroring the environment's churn guard so
+    downstream planes never see an all-dead federation)."""
+    if not plan.perturbs_availability:
+        return avail
+    n = avail.shape[0]
+    down = jnp.zeros((n,), dtype=bool)
+    for c in plan.crashes:
+        active = jnp.asarray(c.active(segment))
+        u = jax.random.uniform(_event_key(key, _SALT_CRASH, c.start), (n,))
+        down = down | (active & (u < c.frac))
+    for r in plan.regions:
+        active = jnp.asarray(r.active(segment))
+        center = jnp.asarray(r.center, dtype=positions.dtype)
+        dist = jnp.linalg.norm(positions - center[None, :], axis=-1)
+        down = down | (active & (dist <= r.radius))
+    out = avail & ~down
+    return jnp.where(jnp.any(out), out, jnp.arange(n) == 0)
+
+
+def apply_pfail(key, plan: FaultPlan, segment: int, p_fail):
+    """Overlay the plan's link bursts onto the (N, N) failure-probability
+    matrix: each burst floors a random (but window-stable) fraction of
+    links at its ``p_fail`` level via :func:`degrade_links`."""
+    if not plan.perturbs_links:
+        return p_fail
+    out = p_fail
+    for b in plan.link_bursts:
+        active = jnp.asarray(b.active(segment))
+        u = jax.random.uniform(_event_key(key, _SALT_BURST, b.start),
+                               p_fail.shape)
+        out = degrade_links(out, active & (u < b.frac), b.p_fail)
+    return out

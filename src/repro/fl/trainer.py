@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -53,6 +54,14 @@ class FLConfig:
     adam_b2: float = 0.99
     adam_eps: float = 1e-8
     adam_lr: float = 1e-3
+    # Minimum participation floor: if fewer than ceil(min_participation * N)
+    # clients are up for aggregation (crash pulse, regional outage), the
+    # round carries the last good global model forward — clients keep
+    # training locally — instead of averaging over a near-empty mask (a
+    # 1-client "global" model would yank the whole federation toward one
+    # client's data).  0.0 (default) disables the floor: bit-identical to
+    # the pre-floor trainer.
+    min_participation: float = 0.0
 
 
 class FLCarry(NamedTuple):
@@ -113,6 +122,11 @@ def _round_fn(cfg: FLConfig, ae_cfg, carry, data, sizes, agg_mask,
     cp, gp, mu, nu, t = carry
     n = data.shape[0]
     loss_grad = jax.grad(ae.recon_loss)
+    # participation floor (static: cfg and n are trace-time constants, so a
+    # disabled floor compiles to exactly the pre-floor program); the 1e-9
+    # slack keeps ceil exact under float repr (0.5 * 6 -> 3, not 4)
+    floor = (max(1, math.ceil(cfg.min_participation * n - 1e-9))
+             if cfg.min_participation > 0.0 else 0)
 
     def cl(tree):   # pin the leading client axis to the mesh
         return sh.constrain_clients(tree, rules)
@@ -159,15 +173,34 @@ def _round_fn(cfg: FLConfig, ae_cfg, carry, data, sizes, agg_mask,
         if cfg.scheme == "fedsgd":
             # aggregate gradients every iteration; all clients share
             # the global model (stragglers' grads are dropped)
-            grads = cl(_broadcast(rep(_masked_mean(grads, agg_mask)), n))
+            agg = cl(_broadcast(rep(_masked_mean(grads, agg_mask)), n))
+            if floor:
+                # below the floor the shared step would average a handful
+                # of survivors — fall back to purely local gradients
+                ok = jnp.sum(agg_mask) >= floor
+                grads = jax.tree.map(
+                    lambda a, g: jnp.where(ok, a, g), agg, grads)
+            else:
+                grads = agg
         cp, mu, nu = apply_update(cp, cl(grads), mu, nu, t)
         return (cl(cp), mu, nu, t), None
 
     (cp, mu, nu, t), _ = jax.lax.scan(iter_body, (cp, mu, nu, t), keys_round)
     # aggregation at the end of the round (FedAvg/FedProx param mean):
     # a cross-shard reduction over the client axis — the all-reduce
-    gp_new = rep(_masked_mean(cp, agg_mask))
-    cp = cl(_broadcast(gp_new, n))
+    gp_cand = rep(_masked_mean(cp, agg_mask))
+    if floor:
+        # graceful fallback below the participation floor: carry the last
+        # good global model forward and let clients keep their local params
+        # (they rejoin the average once participation recovers)
+        ok = jnp.sum(agg_mask) >= floor
+        gp_new = rep(jax.tree.map(
+            lambda cand, old: jnp.where(ok, cand, old), gp_cand, gp))
+        cp = cl(jax.tree.map(lambda b, local: jnp.where(ok, b, local),
+                             _broadcast(gp_new, n), cp))
+    else:
+        gp_new = gp_cand
+        cp = cl(_broadcast(gp_new, n))
     return FLCarry(cp, gp_new, mu, nu, t)
 
 

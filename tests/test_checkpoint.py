@@ -1,9 +1,14 @@
-"""Checkpoint store: save/load roundtrip over nested pytrees."""
+"""Checkpoint store: save/load roundtrip over nested pytrees, atomic-write
+crash safety, and loud failure on corrupt archives / key or shape drift."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import load_pytree, save_pytree
+from repro.checkpoint.store import load_flat, restore_subtree
 
 
 def test_roundtrip(tmp_path):
@@ -33,3 +38,83 @@ def test_model_params_roundtrip(tmp_path):
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
+
+
+def _tree_and_path(tmp_path):
+    tree = {"a": jnp.arange(4, dtype=jnp.float32), "b": {"c": jnp.ones((2,))}}
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    return tree, path
+
+
+def test_shape_mismatch_raises_valueerror(tmp_path):
+    tree, path = _tree_and_path(tmp_path)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    like["a"] = jax.ShapeDtypeStruct((5,), jnp.float32)
+    with pytest.raises(ValueError, match="shape mismatch at 'a'"):
+        load_pytree(path, like)
+
+
+def test_missing_and_extra_keys_raise_valueerror(tmp_path):
+    tree, path = _tree_and_path(tmp_path)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    like["d"] = jax.ShapeDtypeStruct((1,), jnp.float32)   # not in archive
+    with pytest.raises(ValueError, match="missing keys"):
+        load_pytree(path, like)
+    del like["d"], like["a"]                              # archive has extra
+    with pytest.raises(ValueError, match="unexpected keys"):
+        load_pytree(path, like)
+
+
+def test_truncated_file_rejected(tmp_path):
+    tree, path = _tree_and_path(tmp_path)
+    raw = open(path, "rb").read()
+    for cut in (len(raw) // 2, 10):
+        trunc = str(tmp_path / f"trunc_{cut}.npz")
+        with open(trunc, "wb") as f:
+            f.write(raw[:cut])
+        with pytest.raises(ValueError, match="corrupt or truncated"):
+            load_flat(trunc)
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        with pytest.raises(ValueError, match="corrupt or truncated"):
+            load_pytree(trunc, like)
+
+
+def test_failed_save_leaves_previous_checkpoint_intact(tmp_path,
+                                                       monkeypatch):
+    """Atomicity: a crash mid-save must never corrupt the latest
+    checkpoint — the temp file is cleaned up and the original survives."""
+    tree, path = _tree_and_path(tmp_path)
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(OSError):
+        save_pytree(path, {"a": jnp.zeros((9,)), "b": {"c": jnp.zeros((9,))}})
+    monkeypatch.undo()
+
+    assert not os.path.exists(path + ".tmp")
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out = load_pytree(path, like)           # the old checkpoint still loads
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+
+
+def test_load_flat_and_restore_subtree(tmp_path):
+    tree = {"carry": {"w": jnp.full((3, 2), 2.0), "b": jnp.zeros((2,))},
+            "step": jnp.asarray(7, jnp.int32)}
+    path = str(tmp_path / "rs.npz")
+    save_pytree(path, tree)
+    flat = load_flat(path)
+    assert sorted(flat) == ["carry/b", "carry/w", "step"]
+    like = {"w": jax.ShapeDtypeStruct((3, 2), jnp.float32),
+            "b": jax.ShapeDtypeStruct((2,), jnp.float32)}
+    sub = restore_subtree(flat, "carry", like)
+    np.testing.assert_array_equal(np.asarray(sub["w"]),
+                                  np.asarray(tree["carry"]["w"]))
+    with pytest.raises(ValueError, match="missing key 'nope/"):
+        restore_subtree(flat, "nope", like)
+    bad = {"w": jax.ShapeDtypeStruct((4, 2), jnp.float32),
+           "b": like["b"]}
+    with pytest.raises(ValueError, match="shape mismatch at 'carry/w'"):
+        restore_subtree(flat, "carry", bad)

@@ -1,0 +1,284 @@
+"""Fault plane units: deterministic injection, the retry queue's
+offer/take/resolve lifecycle, the exchange's failed-link extraction, and
+the FL trainer's minimum-participation floor."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import degrade_links
+from repro.core.exchange import ExchangeResult
+from repro.dynamics.scenarios import get_scenario
+from repro.faults import (CrashPulse, FaultPlan, LinkBurst, RegionalOutage,
+                          RetryPolicy, RetryQueue, apply_availability,
+                          apply_pfail)
+
+KEY = jax.random.PRNGKey(3)
+N = 8
+POS = jax.random.uniform(jax.random.PRNGKey(5), (N, 2))
+ALL_UP = jnp.ones((N,), bool)
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+
+def test_fault_scenarios_registered():
+    burst = get_scenario("burst-outage")
+    assert isinstance(burst.faults, FaultPlan)
+    assert burst.faults.perturbs_links and not burst.faults.perturbs_availability
+    regional = get_scenario("regional-failure")
+    assert regional.faults.perturbs_availability
+    assert get_scenario("preempt-resume").faults.preempt_at == 2
+
+
+def test_fault_plan_active_labels():
+    plan = FaultPlan(crashes=(CrashPulse(start=2, duration=2),),
+                     link_bursts=(LinkBurst(start=3),))
+    assert plan.active(1) == ()
+    assert plan.active(2) == ("crash[2+2]",)
+    assert plan.active(3) == ("crash[2+2]", "burst[3+1]")
+    assert plan.active(4) == ()
+
+
+# ---------------------------------------------------------------------------
+# availability injection
+# ---------------------------------------------------------------------------
+
+def test_no_availability_faults_is_identity():
+    plan = FaultPlan(link_bursts=(LinkBurst(start=1),))
+    assert apply_availability(KEY, plan, 1, POS, ALL_UP) is ALL_UP
+
+
+def test_crash_pulse_window_and_stability():
+    plan = FaultPlan(crashes=(CrashPulse(start=1, duration=2, frac=0.5),))
+    outside = apply_availability(KEY, plan, 0, POS, ALL_UP)
+    np.testing.assert_array_equal(np.asarray(outside), np.asarray(ALL_UP))
+    s1 = np.asarray(apply_availability(KEY, plan, 1, POS, ALL_UP))
+    s2 = np.asarray(apply_availability(KEY, plan, 2, POS, ALL_UP))
+    assert s1.sum() < N                      # the pulse took someone down
+    # a crash is a crash: the same victims stay down for the whole window
+    np.testing.assert_array_equal(s1, s2)
+    # and the draw is a pure function of (key, start): rerun == same victims
+    np.testing.assert_array_equal(
+        s1, np.asarray(apply_availability(KEY, plan, 1, POS, ALL_UP)))
+
+
+def test_distinct_pulses_draw_independent_victims():
+    plan = FaultPlan(crashes=(CrashPulse(start=1, frac=0.5),
+                              CrashPulse(start=4, frac=0.5),))
+    s1 = np.asarray(apply_availability(KEY, plan, 1, POS, ALL_UP))
+    s4 = np.asarray(apply_availability(KEY, plan, 4, POS, ALL_UP))
+    assert not np.array_equal(s1, s4)
+
+
+def test_total_crash_keeps_one_client():
+    plan = FaultPlan(crashes=(CrashPulse(start=1, frac=1.0),))
+    out = np.asarray(apply_availability(KEY, plan, 1, POS, ALL_UP))
+    np.testing.assert_array_equal(out, np.arange(N) == 0)
+
+
+def test_regional_outage_is_geometric():
+    center = tuple(np.asarray(POS[2]))       # sure to contain client 2
+    plan = FaultPlan(regions=(RegionalOutage(start=1, center=center,
+                                             radius=0.25),))
+    out = np.asarray(apply_availability(KEY, plan, 1, POS, ALL_UP))
+    dist = np.linalg.norm(np.asarray(POS) - np.asarray(center), axis=-1)
+    np.testing.assert_array_equal(out, dist > 0.25)
+    assert not out[2]
+    # the overlay composes with an already-degraded availability trace
+    base = ALL_UP.at[5].set(False)
+    both = np.asarray(apply_availability(KEY, plan, 1, POS, base))
+    np.testing.assert_array_equal(both, (dist > 0.25) & np.asarray(base))
+
+
+# ---------------------------------------------------------------------------
+# link injection
+# ---------------------------------------------------------------------------
+
+def test_degrade_links_floors_only_hit_links():
+    pf = jnp.full((3, 3), 0.2).at[0, 1].set(0.99)
+    hit = jnp.zeros((3, 3), bool).at[0, 1].set(True).at[1, 2].set(True)
+    out = np.asarray(degrade_links(pf, hit, 0.9))
+    assert out[0, 1] == pytest.approx(0.99)   # never improves a worse link
+    assert out[1, 2] == pytest.approx(0.9)
+    assert out[2, 0] == pytest.approx(0.2)    # untouched off the mask
+
+
+def test_link_burst_window_fraction_and_stability():
+    plan = FaultPlan(link_bursts=(LinkBurst(start=1, duration=2, frac=0.5,
+                                            p_fail=0.95),))
+    pf = jnp.full((N, N), 0.1)
+    np.testing.assert_array_equal(np.asarray(apply_pfail(KEY, plan, 0, pf)),
+                                  np.asarray(pf))
+    s1 = np.asarray(apply_pfail(KEY, plan, 1, pf))
+    s2 = np.asarray(apply_pfail(KEY, plan, 2, pf))
+    np.testing.assert_array_equal(s1, s2)     # window-stable victim links
+    hit = s1 > 0.5
+    assert 0.3 < hit.mean() < 0.7             # ~frac of links floored
+    np.testing.assert_allclose(s1[hit], 0.95)
+    np.testing.assert_allclose(s1[~hit], 0.1)
+
+
+# ---------------------------------------------------------------------------
+# retry queue
+# ---------------------------------------------------------------------------
+
+POL = RetryPolicy(enabled=True, max_attempts=3, backoff_base=1,
+                  backoff_factor=2)
+
+
+def test_offer_disabled_policy_is_noop():
+    q = RetryQueue()
+    assert q.offer(0, [(1, 2)], RetryPolicy(enabled=False)) == 0
+    assert len(q) == 0
+
+
+def test_offer_dedups_pending_links():
+    q = RetryQueue()
+    assert q.offer(0, [(1, 2), (3, 4), (1, 2)], POL) == 2
+    assert q.offer(1, [(1, 2), (5, 6)], POL) == 1
+    assert sorted(q.links) == [(1, 2), (3, 4), (5, 6)]
+
+
+def test_take_due_respects_backoff_and_one_per_receiver():
+    q = RetryQueue()
+    q.offer(0, [(1, 2), (1, 3), (4, 5)], POL)   # due at 0 + 1 = 1
+    assert q.take_due(0) == []                  # nothing due yet
+    due = q.take_due(1)
+    # receiver 1 has two pending links; only the older one is taken
+    assert [(e.rx, e.tx) for e in due] == [(1, 2), (4, 5)]
+    assert q.links == [(1, 3)]
+
+
+def test_resolve_backoff_schedule_and_exhaustion():
+    q = RetryQueue()
+    q.offer(0, [(1, 2)], POL)
+    e = q.take_due(1)[0]
+    assert q.resolve(1, e, delivered=False, policy=POL)   # attempt 1
+    assert q._q[0].due == 1 + 1 * 2               # base * factor**attempts
+    e = q.take_due(3)[0]
+    assert q.resolve(3, e, delivered=False, policy=POL)   # attempt 2
+    assert q._q[0].due == 3 + 1 * 4
+    e = q.take_due(7)[0]
+    # attempt 3 == max_attempts: the link is abandoned, not requeued
+    assert not q.resolve(7, e, delivered=False, policy=POL)
+    assert len(q) == 0
+
+
+def test_resolve_delivered_drops_entry():
+    q = RetryQueue()
+    q.offer(0, [(1, 2)], POL)
+    e = q.take_due(1)[0]
+    assert not q.resolve(1, e, delivered=True, policy=POL)
+    assert len(q) == 0
+
+
+def test_retry_queue_array_roundtrip():
+    q = RetryQueue()
+    q.offer(2, [(1, 2), (3, 4)], POL)
+    q2 = RetryQueue.from_array(q.to_array())
+    assert q2.links == q.links
+    assert [(e.attempts, e.due) for e in q2._q] == \
+        [(e.attempts, e.due) for e in q._q]
+    empty = RetryQueue.from_array(RetryQueue().to_array())
+    assert len(empty) == 0
+    with pytest.raises(ValueError, match=r"\(M, 4\)"):
+        RetryQueue.from_array(np.zeros((2, 3), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# failed-link extraction (the queue's input)
+# ---------------------------------------------------------------------------
+
+def test_failed_links_batched_plane():
+    in_edge = np.array([3, 1, 0, 2])        # rx 1 is a self link
+    fail = jnp.asarray([True, True, False, True])
+    res = ExchangeResult(client_data=None, moved_dev=None, fail=fail,
+                         _ctx=(None, None, in_edge, True))
+    assert res.failed_links() == [(0, 3), (3, 2)]
+
+
+def test_failed_links_loop_plane_and_unsampled():
+    res = ExchangeResult(client_data=None, moved_dev=None,
+                         _decisions=[(0, 3, -1, False), (1, 2, 0, True),
+                                     (2, 4, -1, False)])
+    assert res.failed_links() == [(0, 3), (2, 4)]
+    assert ExchangeResult(client_data=None,
+                          moved_dev=None).failed_links() == []
+
+
+# ---------------------------------------------------------------------------
+# FL minimum-participation floor
+# ---------------------------------------------------------------------------
+
+def _fl_world(n=4):
+    from repro.models.autoencoder import AEConfig
+    ae_cfg = AEConfig(28, 28, 1, widths=(4, 8), latent_dim=8)
+    k = jax.random.PRNGKey(11)
+    xs = [jax.random.uniform(jax.random.fold_in(k, i), (12, 28, 28, 1))
+          for i in range(n)]
+    ev = jax.random.uniform(jax.random.fold_in(k, 99), (8, 28, 28, 1))
+    return ae_cfg, xs, ev
+
+
+@pytest.mark.parametrize("scheme", ["fedavg", "fedsgd"])
+def test_min_participation_floor_carries_global_forward(scheme):
+    from repro.fl.trainer import FLConfig, fl_train
+    from repro.models import autoencoder as ae
+    ae_cfg, xs, ev = _fl_world()
+    init = ae.init_ae(jax.random.PRNGKey(0), ae_cfg)
+    cfg = FLConfig(scheme=scheme, total_iters=10, tau_a=10, batch_size=4,
+                   eval_every=10, min_participation=0.5)
+    # one of four clients up: below the ceil(0.5 * 4) = 2 floor
+    res = fl_train(jax.random.PRNGKey(1), xs, ae_cfg, cfg, ev,
+                   init_params=init, avail_mask=jnp.array([1., 0., 0., 0.]))
+    for got, want in zip(jax.tree.leaves(res.global_params),
+                         jax.tree.leaves(init)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if scheme == "fedavg":
+        # clients kept training locally (fedsgd's fallback trains locally
+        # too, but from the shared model, so client 0 drift is the check)
+        client0 = jax.tree.map(lambda p: p[0], res.client_params)
+        assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree.leaves(client0),
+                                   jax.tree.leaves(init)))
+
+
+def test_min_participation_floor_met_is_bit_identical_to_no_floor():
+    from repro.fl.trainer import FLConfig, fl_train
+    from repro.models import autoencoder as ae
+    ae_cfg, xs, ev = _fl_world()
+    init = ae.init_ae(jax.random.PRNGKey(0), ae_cfg)
+    mask = jnp.array([1., 1., 0., 0.])       # 2 up == the floor, exactly
+    base = FLConfig(total_iters=10, tau_a=10, batch_size=4, eval_every=10)
+    r0 = fl_train(jax.random.PRNGKey(1), xs, ae_cfg, base, ev,
+                  init_params=init, avail_mask=mask)
+    r1 = fl_train(jax.random.PRNGKey(1), xs, ae_cfg,
+                  dataclasses.replace(base, min_participation=0.5), ev,
+                  init_params=init, avail_mask=mask)
+    for a, b in zip(jax.tree.leaves(r0.global_params),
+                    jax.tree.leaves(r1.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_min_participation_recovery_rejoins_aggregation():
+    """Below the floor the global model freezes; once participation
+    recovers the next aggregate folds the survivors' progress back in."""
+    from repro.fl.trainer import FLConfig, fl_train
+    from repro.models import autoencoder as ae
+    ae_cfg, xs, ev = _fl_world()
+    init = ae.init_ae(jax.random.PRNGKey(0), ae_cfg)
+    cfg = FLConfig(total_iters=20, tau_a=10, batch_size=4, eval_every=20,
+                   min_participation=0.5)
+    seg1 = fl_train(jax.random.PRNGKey(1), xs, ae_cfg, cfg, ev,
+                    init_params=init, avail_mask=jnp.array([1., 0., 0., 0.]),
+                    start_iter=0, stop_iter=10)
+    seg2 = fl_train(jax.random.PRNGKey(1), xs, ae_cfg, cfg, ev,
+                    init_carry=seg1.carry, avail_mask=jnp.ones((4,)),
+                    start_iter=10, stop_iter=20)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(seg2.global_params),
+                               jax.tree.leaves(init)))

@@ -1,0 +1,184 @@
+"""Crash/resume bit-identity: a faulted, retrying, checkpointing run that
+is killed at ANY segment boundary and resumed must replay to exactly the
+uninterrupted run — eval losses, per-segment trust graphs, delivery
+metrics and final global parameters all bit-equal.  Plus the obs contracts
+(one transfer per run, compile-free steady state) on the faulted runtime."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.faults import (CrashPulse, FaultPlan, LinkBurst, Preempted,
+                          RetryPolicy)
+
+KEY = jax.random.PRNGKey(21)
+N_SEGMENTS = 4
+
+pytestmark = pytest.mark.slow
+
+
+def _world():
+    from repro.data import partition_by_classes
+    from repro.data.synthetic import fmnist_like_split
+    from repro.models.autoencoder import AEConfig
+    ds, ev = fmnist_like_split(jax.random.PRNGKey(0), n_train_per_class=40,
+                               n_eval_per_class=10)
+    xs, ys, _ = partition_by_classes(0, ds.images, ds.labels, n_clients=6,
+                                     classes_per_client=3)
+    return xs, ys, AEConfig(28, 28, 1, widths=(4, 8), latent_dim=8), ev.images
+
+
+def _scenario():
+    from repro.dynamics import ScenarioConfig
+    return ScenarioConfig(
+        "chaos-test", fading_rho=0.7, fading_sigma=0.6,
+        faults=FaultPlan(
+            crashes=(CrashPulse(start=1, duration=1, frac=0.4),),
+            link_bursts=(LinkBurst(start=1, duration=1, frac=0.6,
+                                   p_fail=0.97),)))
+
+
+def _cfg(ckpt_dir):
+    from repro.core.exchange import ExchangeConfig
+    from repro.core.pipeline import PipelineConfig
+    from repro.core.qlearning import RLConfig
+    from repro.dynamics import OrchestratorConfig
+    from repro.fl import FLConfig
+    return OrchestratorConfig(
+        n_segments=N_SEGMENTS, iters_per_segment=10, mode="online",
+        rediscover_every=1, burst_episodes=60,
+        pipeline=PipelineConfig(
+            rl=RLConfig(n_episodes=120, buffer_size=30),
+            exchange=ExchangeConfig(apply_channel_failure=True,
+                                    overflow="drop")),
+        fl=FLConfig(tau_a=10, eval_every=10, batch_size=16,
+                    min_participation=0.2),
+        retry=RetryPolicy(enabled=True, max_attempts=2, backoff_base=1),
+        checkpoint_dir=ckpt_dir, checkpoint_every=1)
+
+
+def _snapshot(result):
+    """Everything the bit-identity claim covers, pulled to host numpy."""
+    return {
+        "summary": result.trace.summary(),
+        "eval_losses": np.asarray(result.trace.eval_losses),
+        "eval_curve": np.asarray(result.trace.eval_curve),
+        "in_edges": [np.asarray(s.in_edge) for s in result.trace.segments],
+        "realized": [s.realized_delivery for s in result.trace.segments],
+        "retried": [(s.retried, s.retry_delivered)
+                    for s in result.trace.segments],
+        "final_in_edge": np.asarray(result.in_edge),
+        "global_params": [np.asarray(p)
+                          for p in jax.tree.leaves(result.global_params)],
+    }
+
+
+def _assert_identical(got, want):
+    assert got["summary"] == want["summary"]
+    np.testing.assert_array_equal(got["eval_losses"], want["eval_losses"])
+    np.testing.assert_array_equal(got["eval_curve"], want["eval_curve"])
+    assert got["realized"] == want["realized"]
+    assert got["retried"] == want["retried"]
+    for a, b in zip(got["in_edges"], want["in_edges"]):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(got["final_in_edge"],
+                                  want["final_in_edge"])
+    for a, b in zip(got["global_params"], want["global_params"]):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.fixture(scope="module")
+def reference(tmp_path_factory):
+    """The uninterrupted faulted run (checkpointing on, retry on)."""
+    from repro.dynamics import run_orchestrator
+    xs, ys, ae_cfg, ev = _world()
+    ckpt = str(tmp_path_factory.mktemp("ref_ckpt"))
+    res = run_orchestrator(KEY, xs, ys, ae_cfg, _cfg(ckpt), _scenario(), ev)
+    return {"snap": _snapshot(res), "ckpt_dir": ckpt,
+            "world": (xs, ys, ae_cfg, ev)}
+
+
+@pytest.mark.parametrize("kill_at", list(range(1, N_SEGMENTS)))
+def test_kill_and_resume_is_bit_identical(reference, tmp_path, kill_at):
+    from repro.dynamics import run_orchestrator
+    xs, ys, ae_cfg, ev = reference["world"]
+    cfg = _cfg(str(tmp_path))
+    scn = _scenario()
+    scn = dataclasses.replace(
+        scn, faults=dataclasses.replace(scn.faults, preempt_at=kill_at))
+
+    with pytest.raises(Preempted) as ei:
+        run_orchestrator(KEY, xs, ys, ae_cfg, cfg, scn, ev)
+    assert ei.value.segment == kill_at
+    assert ei.value.checkpoint == cfg.checkpoint_path
+    assert os.path.exists(ei.value.checkpoint)
+
+    res = run_orchestrator(KEY, xs, ys, ae_cfg, cfg, scn, ev,
+                           resume_from=ei.value.checkpoint)
+    _assert_identical(_snapshot(res), reference["snap"])
+
+
+def test_resume_rejects_wrong_key(reference, tmp_path):
+    from repro.dynamics import CHECKPOINT_NAME, run_orchestrator
+    xs, ys, ae_cfg, ev = reference["world"]
+    ckpt = os.path.join(reference["ckpt_dir"], CHECKPOINT_NAME)
+    with pytest.raises(ValueError, match="resume key mismatch"):
+        run_orchestrator(jax.random.PRNGKey(99), xs, ys, ae_cfg,
+                         _cfg(str(tmp_path)), _scenario(), ev,
+                         resume_from=ckpt)
+
+
+def test_resume_rejects_geometry_mismatch(reference):
+    from repro.dynamics import CHECKPOINT_NAME, load_run_state
+    _, _, ae_cfg, _ = reference["world"]
+    ckpt = os.path.join(reference["ckpt_dir"], CHECKPOINT_NAME)
+    with pytest.raises(ValueError, match="n_segments"):
+        load_run_state(ckpt, ae_cfg, N_SEGMENTS + 1, 10)
+
+
+def test_faulted_run_keeps_obs_contracts(tmp_path):
+    """Fault injection, retry exchange and per-segment checkpointing must
+    not break the deferred-metrics contracts: still exactly ONE host
+    transfer per run, still compile-free steady-state segments."""
+    from repro.dynamics import run_orchestrator
+    xs, ys, ae_cfg, ev = _world()
+    try:
+        obs.enable(manifest=str(tmp_path / "chaos.jsonl"))
+        res = run_orchestrator(KEY, xs, ys, ae_cfg,
+                               _cfg(str(tmp_path / "ckpt")), _scenario(), ev)
+    finally:
+        rec = obs.disable()
+        obs.drain()     # leave no residue for later modules' events() checks
+    evs = rec["events"]
+
+    assert rec["totals"]["transfers"] == 1
+    mat = [e for e in evs if e.name == "metrics-materialize"]
+    assert len(mat) == 1 and mat[0].transfers == 1
+
+    segs = {e.attrs["segment"]: e for e in evs if e.name == "segment"}
+    assert sorted(segs) == list(range(N_SEGMENTS))
+    for s in range(2, N_SEGMENTS):
+        assert segs[s].compiles == 0, (
+            f"segment {s} retraced: {segs[s].compiles} compile events")
+
+    # the fault overlay ran every post-0 segment, annotated with its window
+    inj = {e.attrs["segment"]: e.attrs["events"]
+           for e in evs if e.name == "fault-inject"}
+    assert sorted(inj) == list(range(1, N_SEGMENTS))
+    assert "crash[1+1]" in inj[1] and "burst[1+1]" in inj[1]
+    assert inj[2] == "none"
+
+    # a checkpoint landed at every boundary
+    saves = [e for e in evs if e.name == "checkpoint-save"]
+    assert len(saves) == N_SEGMENTS
+    assert os.path.exists(str(tmp_path / "ckpt" / "ckpt_latest.npz"))
+
+    # the burst produced failures; the queue re-offered at least one link
+    summ = res.trace.summary()
+    assert summ["total_failed_links"] > 0
+    assert summ["total_retried"] > 0
+    assert jnp.asarray(res.trace.eval_losses).ndim == 1  # sanity
