@@ -130,6 +130,8 @@ PHASE_FIELDS = (
     ("t_faults", "fault-inject"),
     ("t_retry", "retry-exchange"),
     ("t_checkpoint", "checkpoint-save"),
+    # fused segment engine (zero on segment_impl="eager" runs)
+    ("t_scan", "scan-chunk"),
 )
 
 
@@ -149,4 +151,5 @@ def phase_attribution(events) -> dict:
         row[field] = round(d["total"], 6) if d else 0.0
     row["n_retraces"] = sum(e.compiles for e in events if e.depth == 0)
     row["n_transfers"] = sum(e.transfers for e in events if e.depth == 0)
+    row["n_scan_chunks"] = sum(1 for e in events if e.name == "scan-chunk")
     return row

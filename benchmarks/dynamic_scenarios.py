@@ -130,6 +130,96 @@ def smoke(quick=True):
           f"moved={s['total_moved']};"
           f"rediscoveries={s['n_rediscoveries']};"
           + _phase_derived(s))
+    # ... plus the same row on the fused engine, so every PR's artifact
+    # carries a scan-chunk perf point (and its n_scan_chunks/t_scan fields)
+    key, xs, ys, ev, ae_cfg = C.make_world(bc, "fmnist")
+    sf, _ = _run_row("dynamic_smoke__fading_scan", key, xs, ys, ae_cfg,
+                     _fused_cfg(bc, True, "scan"), "fading", ev.images,
+                     {"bench": "dynamic_smoke", "row": "fading/scan",
+                      "dataset": "fmnist", "quick": True,
+                      "config": dataclasses.asdict(bc)})
+    print(f"dynamic_smoke_fused_fading_scan,{sf['elapsed_us']:.0f},"
+          f"final_loss={sf['final_loss']:.5f};"
+          + _phase_derived(sf)
+          + f";t_scan={sf['t_scan']:.3f};"
+          f"n_scan_chunks={sf['n_scan_chunks']}")
+    C.save_json("dynamic_smoke_fused", {"fading/scan": sf})
+
+
+# ---------------------------------------------------------------------------
+# fused segment engine (segment_impl="scan") vs the eager loop
+# ---------------------------------------------------------------------------
+
+def _fused_cfg(bc: C.BenchConfig, quick: bool, impl: str) -> OrchestratorConfig:
+    """Online orchestrator config on the array plane the fused engine
+    requires (batched gate, fixed cap, on-device reserve selection) —
+    applied to BOTH engines so a scanfuse row isolates eager dispatch vs
+    lax.scan, not the reserve-sampling stream."""
+    cfg = _orch_cfg(bc, "online", quick)
+    return dataclasses.replace(
+        cfg, segment_impl=impl,
+        pipeline=dataclasses.replace(
+            cfg.pipeline,
+            exchange=ExchangeConfig(apply_channel_failure=True,
+                                    overflow="drop",
+                                    reserve_selector="device")))
+
+
+def _scan_derived(s: dict) -> str:
+    return (f"final_loss={s['final_loss']:.5f};"
+            f"expected_delivery={s['mean_expected_delivery']:.3f};"
+            f"moved={s['total_moved']};"
+            + _phase_derived(s)
+            + f";t_scan={s['t_scan']:.3f};"
+            f"n_scan_chunks={s['n_scan_chunks']}")
+
+
+def scanfuse(quick=True):
+    """Fused-vs-eager engine rows: each online scenario runs three times —
+    the eager loop, the scan engine cold (its row records the one compile
+    per chunk shape in ``n_retraces``), and the scan engine warm (the
+    steady-state wall time the speedup is computed from; ``n_retraces``
+    must be ~0 — same statics, same chunk length, cache hit).  Final
+    losses must agree across engines (same key streams by construction)."""
+    bc = (C.BenchConfig(n_clients=8, n_per_class=60, fl_iters=60, tau_a=10,
+                        eval_every=20, rl_episodes=200, rl_buffer=40)
+          if quick else dataclasses.replace(C.BenchConfig.full(),
+                                            fl_iters=600))
+    name = "scanfuse_fmnist"
+    key, xs, ys, ev, ae_cfg = C.make_world(bc, "fmnist")
+    meta = {"bench": name, "dataset": "fmnist", "quick": quick,
+            "config": dataclasses.asdict(bc)}
+    # generic warm-up (pipeline/pretrain/gate/FL jit caches), as in run()
+    warm = dataclasses.replace(_fused_cfg(bc, quick, "eager"), n_segments=1,
+                               iters_per_segment=bc.tau_a)
+    run_orchestrator(key, xs, ys, ae_cfg, warm, "static", ev.images)
+
+    out = {}
+    for scenario in ("static", "fading", "churn"):
+        rows = {}
+        for variant, impl in (("eager", "eager"), ("scan_cold", "scan"),
+                              ("scan", "scan")):
+            s, res = _run_row(f"{name}__{scenario}_{variant}", key, xs, ys,
+                              ae_cfg, _fused_cfg(bc, quick, impl), scenario,
+                              ev.images, {**meta,
+                                          "row": f"{scenario}/{variant}"})
+            rows[variant] = s
+            out[f"{scenario}/{variant}"] = s
+        speedup = rows["eager"]["elapsed_us"] / rows["scan"]["elapsed_us"]
+        if abs(rows["scan"]["final_loss"]
+               - rows["eager"]["final_loss"]) > 1e-4:
+            raise AssertionError(
+                f"scan diverged from eager on {scenario}: "
+                f"{rows['scan']['final_loss']} vs "
+                f"{rows['eager']['final_loss']}")
+        for variant in ("eager", "scan_cold", "scan"):
+            s = rows[variant]
+            extra = (f";speedup_vs_eager={speedup:.2f}"
+                     if variant == "scan" else "")
+            print(f"scanfuse_{scenario}_{variant},{s['elapsed_us']:.0f},"
+                  + _scan_derived(s) + extra, flush=True)
+    C.save_json(name, out)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -39,7 +39,9 @@ BENCHES = {
     "dryrun": dryrun_table.main,
     "beyond": beyond_paper.main,
     "dynamic": dynamic_scenarios.main,
-    "dynamic-smoke": dynamic_scenarios.smoke,   # CI: one tiny online row
+    "dynamic-smoke": dynamic_scenarios.smoke,   # CI: tiny online rows
+                                                # (eager + fused engine)
+    "scanfuse": dynamic_scenarios.scanfuse,
     "faults": dynamic_scenarios.faults,
     "chaos": dynamic_scenarios.chaos,           # CI: kill+resume identity
     "shard": shard_scaling.main,
@@ -82,11 +84,16 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(BENCHES))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the emitted rows to a BENCH_*.json "
-                         "artifact at PATH")
+                         "artifact at PATH; a bare filename (no directory "
+                         "component) lands in runs/bench/")
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="capture jax.profiler traces of instrumented "
                          "regions under DIR (sets REPRO_PROFILE)")
     args = ap.parse_args()
+    if args.json and not os.path.dirname(args.json):
+        # bench artifacts live under runs/bench/ — a bare filename is a
+        # request for the canonical location, not the repo root
+        args.json = os.path.join("runs", "bench", args.json)
     if args.profile:
         os.environ["REPRO_PROFILE"] = args.profile
     if args.only:

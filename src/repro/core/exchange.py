@@ -58,6 +58,7 @@ from repro.kernels import ops
 from repro.models import autoencoder as ae
 
 OVERFLOW_POLICIES = ("grow", "drop", "error")
+RESERVE_SELECTORS = ("host", "device")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +77,19 @@ class ExchangeConfig:
     #   "error" — cap is fixed and any overflow raises (host-checks the
     #             overflow flag, so this policy synchronises).
     overflow: str = "grow"
+    # Where reserve *indices* are drawn:
+    #   "host"   — (default) the reference numpy path (`_select_reserves`):
+    #              an np.random choice seeded off a device randint — the
+    #              seeds the loop-plane parity suite was recorded against.
+    #   "device" — :func:`select_reserves_device`: a masked top-k over
+    #              per-(transmitter, cluster) `jax.random.uniform` draws,
+    #              entirely on device.  Same distribution (uniform subsets
+    #              without replacement), *different* concrete subsets for a
+    #              given key — the two selectors are not bit-comparable.
+    #              Required by the orchestrator's fused scan path, which
+    #              needs the whole per-segment chain to be a closed device
+    #              program.
+    reserve_selector: str = "host"
 
 
 @dataclasses.dataclass
@@ -110,6 +124,14 @@ class ExchangeResult:
         on first access for the batched plane."""
         if self._decisions is None and self._ctx is not None:
             trust_np, sel, in_edge, apply_channel = self._ctx
+            if isinstance(sel, tuple) and sel and sel[0] == "tensors":
+                # device-selector runs carry (sel_idx, sel_mask) tensors;
+                # normalise to the ragged loop-plane layout on first access
+                si = np.asarray(sel[1])
+                sm = np.asarray(sel[2])
+                sel = [[si[j, m][sm[j, m] > 0]
+                        for m in range(trust_np[j].shape[1])]
+                       for j in range(len(trust_np))]
             self._decisions = _build_decisions(
                 trust_np, sel, np.asarray(in_edge),
                 np.asarray(self.fail), np.asarray(self.accept),
@@ -223,6 +245,47 @@ def _select_reserves(key, assignments, n_clusters_list, r: int, sizes=None):
             row.append(idx)
         sel.append(row)
     return sel
+
+
+def select_reserves_device(key, assignments, sizes, k_max: int, r: int):
+    """On-device reserve selection: the traced counterpart of
+    :func:`_select_reserves`, returning the ``_sel_tensors`` layout directly.
+
+    assignments: stacked (N, cap) cluster ids (entries past ``sizes[j]`` are
+    padding and never selected); returns ``(sel_idx, sel_mask)`` as
+    ((N, K, R) int32, (N, K, R) float32) with each (transmitter, cluster)
+    row holding min(r, |members|) distinct member indices, sorted ascending
+    in a valid-prefix layout — exactly the shape contract the batched gate
+    (`_exchange_device`) consumes.
+
+    Mechanism: one uniform draw per (transmitter, cluster, slot), masked to
+    -inf off-cluster, then ``top_k`` — a uniform subset without replacement.
+    Same distribution as the host selector but *different* concrete subsets
+    for a given key (top-k over uniforms vs np.random choice); parity suites
+    that pin exact subsets keep ``reserve_selector="host"``.  Traceable:
+    this is what lets the orchestrator's scan path keep reserve selection
+    inside the fused per-segment device program."""
+    assignments = jnp.asarray(assignments)
+    sizes = jnp.asarray(sizes)
+    n, cap = assignments.shape
+    valid = jnp.arange(cap)[None, :] < sizes[:, None]            # (N, cap)
+    member = valid[:, None, :] & (
+        assignments[:, None, :] == jnp.arange(k_max)[None, :, None])
+    u = jax.random.uniform(key, (n, k_max, cap))
+    score = jnp.where(member, u, -jnp.inf)
+    r_eff = min(int(r), int(cap))
+    top_val, top_idx = jax.lax.top_k(score, r_eff)
+    # non-members surface as -inf scores: map them past the cap, sort so
+    # real picks form an ascending valid prefix (the host selector's order)
+    idx = jnp.where(jnp.isinf(top_val), cap, top_idx)
+    idx = jnp.sort(idx, axis=-1)
+    mask = (idx < cap).astype(jnp.float32)
+    idx = jnp.where(idx < cap, idx, 0).astype(jnp.int32)
+    if r_eff < r:   # cap smaller than the reserve budget: pad dead slots
+        pad = ((0, 0), (0, 0), (0, r - r_eff))
+        idx = jnp.pad(idx, pad)
+        mask = jnp.pad(mask, pad)
+    return idx, mask
 
 
 def _sel_tensors(sel, n: int, k_max: int, r: int):
@@ -422,19 +485,33 @@ def _exchange_device(ae_cfg, apply_channel, out_cap, rules, params, data,
 
 def _gate_batched(cd: ClientData, trust, in_edge, sel, fail_u, p_fail,
                   params, ae_cfg, cfg: ExchangeConfig,
-                  rules: sh.ShardingRules | None = None) -> ExchangeResult:
+                  rules: sh.ShardingRules | None = None,
+                  sel_tensors=None) -> ExchangeResult:
     n, cap = cd.n_clients, cd.cap
     trust_np = [np.asarray(t) for t in trust]
     k_max = max(t.shape[1] for t in trust_np)
-    sel_idx, sel_mask = _sel_tensors(sel, n, k_max, cfg.reserve_per_cluster)
     trust_s = _stack_trust_padded(trust_np, n, k_max)
 
-    if cfg.overflow == "grow":
-        # static headroom: the largest reserve payload any transmitter
-        # offers this round (host-known — indices only, no data)
-        out_cap = cap + int(sel_mask.sum(axis=(1, 2)).max(initial=0))
+    if sel_tensors is not None:
+        # device selector: (sel_idx, sel_mask) already in tensor layout
+        sel_idx, sel_mask = sel_tensors
+        sel_ctx = ("tensors", sel_idx, sel_mask)
+        if cfg.overflow == "grow":
+            # grow needs a host-known cap: sync only the tiny index mask
+            out_cap = cap + int(np.asarray(
+                jnp.max(jnp.sum(sel_mask, axis=(1, 2)))))
+        else:
+            out_cap = cap
     else:
-        out_cap = cap
+        sel_idx, sel_mask = _sel_tensors(sel, n, k_max,
+                                         cfg.reserve_per_cluster)
+        sel_ctx = sel
+        if cfg.overflow == "grow":
+            # static headroom: the largest reserve payload any transmitter
+            # offers this round (host-known — indices only, no data)
+            out_cap = cap + int(sel_mask.sum(axis=(1, 2)).max(initial=0))
+        else:
+            out_cap = cap
 
     sel_idx_d, sel_mask_d, trust_d = sh.shard_clients(
         (jnp.asarray(sel_idx), jnp.asarray(sel_mask), jnp.asarray(trust_s)),
@@ -448,7 +525,7 @@ def _gate_batched(cd: ClientData, trust, in_edge, sel, fail_u, p_fail,
             "exchange overflow: accepted transfers exceed the ClientData "
             f"cap ({cap}); raise the cap or use overflow='grow'/'drop'")
     return ExchangeResult(new_cd, moved, fail, accept,
-                          _ctx=(trust_np, sel, in_edge,
+                          _ctx=(trust_np, sel_ctx, in_edge,
                                 cfg.apply_channel_failure))
 
 
@@ -477,18 +554,39 @@ def run_exchange(key, datasets, labels, assignments, trust, in_edge, p_fail,
     if cfg.overflow not in OVERFLOW_POLICIES:
         raise ValueError(f"unknown overflow policy {cfg.overflow!r}; "
                          f"expected one of {OVERFLOW_POLICIES}")
+    if cfg.reserve_selector not in RESERVE_SELECTORS:
+        raise ValueError(
+            f"unknown reserve selector {cfg.reserve_selector!r}; "
+            f"expected one of {RESERVE_SELECTORS}")
     if method == "loop" and cfg.overflow != "grow":
         raise ValueError(
             "the loop plane only implements the 'grow' semantics (its "
             "ragged concat has no capacity); use the batched plane for "
             f"overflow={cfg.overflow!r}")
+    if method == "loop" and cfg.reserve_selector != "host":
+        raise ValueError(
+            "the loop plane is the host-selector reference; "
+            "reserve_selector='device' requires the batched plane")
     with obs.span("exchange", method=method):
         cd = as_client_data(datasets, labels, rules=rules)
         n = cd.n_clients
         k_pre, k_sel, k_ch = jax.random.split(key, 3)
-        sel = _select_reserves(k_sel, assignments,
-                               [t.shape[1] for t in trust],
-                               cfg.reserve_per_cluster, sizes=cd.sizes)
+        sel = sel_tensors = None
+        if cfg.reserve_selector == "device":
+            if isinstance(assignments, (list, tuple)):
+                stacked = np.full((n, cd.cap), -1, np.int32)
+                for j, a in enumerate(assignments):
+                    a = np.asarray(a)
+                    stacked[j, :a.shape[0]] = a
+                assignments = stacked
+            k_max = max(t.shape[1] for t in trust)
+            sel_tensors = select_reserves_device(
+                k_sel, assignments, cd.sizes, k_max,
+                cfg.reserve_per_cluster)
+        else:
+            sel = _select_reserves(k_sel, assignments,
+                                   [t.shape[1] for t in trust],
+                                   cfg.reserve_per_cluster, sizes=cd.sizes)
         fail_u = jax.random.uniform(k_ch, (n,))
 
         if method == "loop":
@@ -522,4 +620,5 @@ def run_exchange(key, datasets, labels, assignments, trust, in_edge, p_fail,
             params = batching.stack_pytrees(list(params), rules)
         with obs.span("gate", method=method):
             return _gate_batched(cd, trust, in_edge, sel, fail_u, p_fail,
-                                 params, ae_cfg, cfg, rules)
+                                 params, ae_cfg, cfg, rules,
+                                 sel_tensors=sel_tensors)

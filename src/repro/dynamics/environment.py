@@ -50,13 +50,16 @@ def env_init(key, n: int, ccfg: ch.ChannelConfig = ch.ChannelConfig(),
     return EnvState(pos, fade, rss, avail, jnp.zeros((), jnp.int32))
 
 
-def _flash_crowd_mask(n: int, t: int, scn: ScenarioConfig) -> jax.Array:
+def _flash_crowd_mask(n: int, t, scn: ScenarioConfig) -> jax.Array:
     """Deterministic arrival ramp: the first ``k(t)`` clients are online,
-    k ramping linearly from ``flash_initial_frac * n`` to ``n``."""
-    frac = min(1.0, scn.flash_initial_frac
-               + (1.0 - scn.flash_initial_frac)
-               * (t / max(scn.flash_ramp_segments, 1)))
-    k = max(1, int(round(frac * n)))
+    k ramping linearly from ``flash_initial_frac * n`` to ``n``.  ``t`` may
+    be a Python int or a traced scalar (the fused segment scan), so the
+    ramp is computed with jnp ops rather than Python arithmetic."""
+    frac = jnp.minimum(1.0, scn.flash_initial_frac
+                       + (1.0 - scn.flash_initial_frac)
+                       * (jnp.asarray(t, jnp.float32)
+                          / max(scn.flash_ramp_segments, 1)))
+    k = jnp.maximum(1, jnp.round(frac * n)).astype(jnp.int32)
     return jnp.arange(n) < k
 
 
@@ -77,7 +80,7 @@ def env_step(key, state: EnvState, scn: ScenarioConfig,
     n = pos.shape[0]
     t = state.t + 1
     if scn.flash_crowd:
-        avail = _flash_crowd_mask(n, int(t), scn)
+        avail = _flash_crowd_mask(n, t, scn)
     elif scn.churn_prob > 0.0:
         avail = jax.random.uniform(ka, (n,)) >= scn.churn_prob
         # never let the whole fleet vanish — keep at least one client

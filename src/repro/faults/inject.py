@@ -19,9 +19,11 @@ and the event's *start* segment only.  Consequences the tests pin:
     independent draws.
 
 Compile-freeness contract: the overlays execute the *same* eager op
-sequence every segment — event windows enter as 0/1 array constants
-(``jnp.asarray(event.active(segment), ...)``) multiplied into the masks,
+sequence every segment — event windows enter as 0/1 array values computed
+from the segment index (:func:`_active`) and multiplied into the masks,
 never as Python branches that would change the op stream between segments.
+The same property makes both overlays traceable: the orchestrator's fused
+segment scan calls them with a traced segment index.
 XLA:CPU caches eager dispatch by op signature, so after the first segment
 the fault plane adds zero compiles — the obs plane's "segments >= 2
 compile nothing" contract holds on faulted runs too (pinned in
@@ -46,6 +48,16 @@ def _event_key(key, salt: int, start: int):
     return jax.random.fold_in(jax.random.fold_in(key, salt), start)
 
 
+def _active(ev, segment):
+    """Traced-safe event-window test: ``segment`` may be a Python int (the
+    eager loop) or a traced scalar (the orchestrator's fused segment scan).
+    The event's bounds are static plan fields either way, so the op stream
+    is identical every segment — the compile-freeness contract holds in
+    both execution modes."""
+    seg = jnp.asarray(segment)
+    return (seg >= ev.start) & (seg < ev.start + ev.duration)
+
+
 def apply_availability(key, plan: FaultPlan, segment: int, positions, avail):
     """Overlay the plan's crash pulses and regional outages onto ``avail``.
 
@@ -60,11 +72,11 @@ def apply_availability(key, plan: FaultPlan, segment: int, positions, avail):
     n = avail.shape[0]
     down = jnp.zeros((n,), dtype=bool)
     for c in plan.crashes:
-        active = jnp.asarray(c.active(segment))
+        active = _active(c, segment)
         u = jax.random.uniform(_event_key(key, _SALT_CRASH, c.start), (n,))
         down = down | (active & (u < c.frac))
     for r in plan.regions:
-        active = jnp.asarray(r.active(segment))
+        active = _active(r, segment)
         center = jnp.asarray(r.center, dtype=positions.dtype)
         dist = jnp.linalg.norm(positions - center[None, :], axis=-1)
         down = down | (active & (dist <= r.radius))
@@ -80,7 +92,7 @@ def apply_pfail(key, plan: FaultPlan, segment: int, p_fail):
         return p_fail
     out = p_fail
     for b in plan.link_bursts:
-        active = jnp.asarray(b.active(segment))
+        active = _active(b, segment)
         u = jax.random.uniform(_event_key(key, _SALT_BURST, b.start),
                                p_fail.shape)
         out = degrade_links(out, active & (u < b.frac), b.p_fail)

@@ -109,14 +109,8 @@ def _masked_mean(tree, mask):
         tree)
 
 
-# Jitted once per (FLConfig, AEConfig, rules, shape) signature — module-level
-# so the orchestrator's once-per-segment fl_train calls hit the jit cache
-# instead of recompiling the scanned round every segment.  The carry is
-# donated: client params + Adam moments are the dominant live buffers and a
-# round only ever needs one generation of them.
-@functools.partial(jax.jit, static_argnums=(0, 1, 7), donate_argnums=(2,))
-def _round_fn(cfg: FLConfig, ae_cfg, carry, data, sizes, agg_mask,
-              keys_round, rules=None):
+def _round_body(cfg: FLConfig, ae_cfg, carry, data, sizes, agg_mask,
+                keys_round, rules=None):
     """One aggregation round: ``tau_a`` scanned local iterations + a masked
     parameter (or per-iteration gradient) mean and broadcast."""
     cp, gp, mu, nu, t = carry
@@ -202,6 +196,17 @@ def _round_fn(cfg: FLConfig, ae_cfg, carry, data, sizes, agg_mask,
         gp_new = gp_cand
         cp = cl(_broadcast(gp_new, n))
     return FLCarry(cp, gp_new, mu, nu, t)
+
+
+# Jitted once per (FLConfig, AEConfig, rules, shape) signature — module-level
+# so the orchestrator's once-per-segment fl_train calls hit the jit cache
+# instead of recompiling the scanned round every segment.  The carry is
+# donated: client params + Adam moments are the dominant live buffers and a
+# round only ever needs one generation of them.  The undecorated
+# ``_round_body`` stays callable so the orchestrator's fused segment scan
+# can inline the round inside its own traced program.
+_round_fn = functools.partial(jax.jit, static_argnums=(0, 1, 7),
+                              donate_argnums=(2,))(_round_body)
 
 
 @functools.partial(jax.jit, static_argnums=2)

@@ -207,3 +207,60 @@ def test_batched_pretrain_matches_loop_pretrain():
         for a, b in zip(jax.tree.leaves(pl), jax.tree.leaves(pb)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=2e-5, atol=2e-6)
+
+
+def test_select_reserves_device_properties():
+    """The on-device selector's contract, over a ragged random world: per
+    (transmitter, cluster) exactly min(r, |members|) picks, members only,
+    ascending valid-prefix layout, deterministic in the key.  (It draws a
+    different subset than ``_select_reserves`` for the same key — the
+    host-selector parity suite above pins that stream separately.)"""
+    rng = np.random.default_rng(3)
+    n, cap, k_max, r = 7, 9, 3, 4
+    sizes = rng.integers(1, cap + 1, size=n)
+    assigns = rng.integers(0, k_max, size=(n, cap)).astype(np.int32)
+    # transmitter 0: one oversubscribed cluster (9 members, budget 4), so
+    # the key actually has a subset to choose
+    sizes[0], assigns[0, :] = cap, 0
+    key = jax.random.PRNGKey(5)
+
+    idx, mask = EX.select_reserves_device(key, assigns, sizes, k_max, r)
+    idx, mask = np.asarray(idx), np.asarray(mask)
+    assert idx.shape == (n, k_max, r) and mask.shape == (n, k_max, r)
+
+    for j in range(n):
+        for m in range(k_max):
+            members = np.nonzero(assigns[j, :sizes[j]] == m)[0]
+            got = idx[j, m][mask[j, m] > 0]
+            # count: the whole cluster at or under budget, else r
+            assert got.size == min(r, members.size), (j, m)
+            # members only, no duplicates, ascending (host-order layout)
+            assert np.all(np.isin(got, members)), (j, m)
+            assert np.all(np.diff(got) > 0), (j, m)
+            # dead slots are a suffix with index 0 (the padding contract)
+            assert np.all(mask[j, m][:got.size] == 1.0)
+            assert np.all(idx[j, m][got.size:] == 0)
+
+    # deterministic in the key; a different key moves some oversubscribed
+    # cluster's subset
+    idx2, mask2 = EX.select_reserves_device(key, assigns, sizes, k_max, r)
+    np.testing.assert_array_equal(idx, np.asarray(idx2))
+    np.testing.assert_array_equal(mask, np.asarray(mask2))
+    idx3, _ = EX.select_reserves_device(jax.random.PRNGKey(6), assigns,
+                                        sizes, k_max, r)
+    assert not np.array_equal(idx, np.asarray(idx3))
+
+
+def test_select_reserves_device_pads_small_cap():
+    """cap < r: every pick fits, the extra budget is dead padded slots."""
+    assigns = np.zeros((2, 3), np.int32)
+    idx, mask = EX.select_reserves_device(jax.random.PRNGKey(0), assigns,
+                                          np.array([3, 2]), 2, 5)
+    assert idx.shape == (2, 2, 5) and mask.shape == (2, 2, 5)
+    np.testing.assert_array_equal(np.asarray(idx[0, 0]),
+                                  np.array([0, 1, 2, 0, 0]))
+    np.testing.assert_array_equal(np.asarray(mask[0, 0]),
+                                  np.array([1, 1, 1, 0, 0], np.float32))
+    np.testing.assert_array_equal(np.asarray(mask[0, 1]), np.zeros(5))
+    np.testing.assert_array_equal(np.asarray(mask[1, 0]),
+                                  np.array([1, 1, 0, 0, 0], np.float32))

@@ -122,6 +122,55 @@ def test_kill_and_resume_is_bit_identical(reference, tmp_path, kill_at):
     _assert_identical(_snapshot(res), reference["snap"])
 
 
+def _scan_cfg(ckpt_dir):
+    """The faulted config on the fused engine: batched/drop/device is the
+    array-plane configuration the scan requires."""
+    cfg = _cfg(ckpt_dir)
+    exc = dataclasses.replace(cfg.pipeline.exchange,
+                              reserve_selector="device")
+    return dataclasses.replace(
+        cfg, segment_impl="scan",
+        pipeline=dataclasses.replace(cfg.pipeline, exchange=exc))
+
+
+@pytest.fixture(scope="module")
+def scan_reference(tmp_path_factory):
+    """The uninterrupted faulted run on the fused engine (scan-vs-scan
+    oracle: resume bit-identity must hold within the engine even though
+    the device reserve selector draws a different stream than eager)."""
+    from repro.dynamics import run_orchestrator
+    xs, ys, ae_cfg, ev = _world()
+    ckpt = str(tmp_path_factory.mktemp("scan_ref_ckpt"))
+    res = run_orchestrator(KEY, xs, ys, ae_cfg, _scan_cfg(ckpt),
+                           _scenario(), ev)
+    return {"snap": _snapshot(res), "world": (xs, ys, ae_cfg, ev)}
+
+
+@pytest.mark.parametrize("kill_at", list(range(1, N_SEGMENTS)))
+def test_scan_kill_and_resume_is_bit_identical(scan_reference, tmp_path,
+                                               kill_at):
+    """Kill the fused run at EVERY chunk boundary (checkpoint_every=1 and
+    retry cadence make every segment a boundary) and resume under
+    ``segment_impl="scan"``: the resumed run re-derives the remaining
+    chunking from absolute segment indices, so the replay is bit-identical
+    to the uninterrupted scan run."""
+    from repro.dynamics import run_orchestrator
+    xs, ys, ae_cfg, ev = scan_reference["world"]
+    cfg = _scan_cfg(str(tmp_path))
+    scn = _scenario()
+    scn = dataclasses.replace(
+        scn, faults=dataclasses.replace(scn.faults, preempt_at=kill_at))
+
+    with pytest.raises(Preempted) as ei:
+        run_orchestrator(KEY, xs, ys, ae_cfg, cfg, scn, ev)
+    assert ei.value.segment == kill_at
+    assert os.path.exists(ei.value.checkpoint)
+
+    res = run_orchestrator(KEY, xs, ys, ae_cfg, cfg, scn, ev,
+                           resume_from=ei.value.checkpoint)
+    _assert_identical(_snapshot(res), scan_reference["snap"])
+
+
 def test_resume_rejects_wrong_key(reference, tmp_path):
     from repro.dynamics import CHECKPOINT_NAME, run_orchestrator
     xs, ys, ae_cfg, ev = reference["world"]

@@ -198,3 +198,57 @@ def test_orchestrator_obs_contracts(tmp_path):
     man = obs.read_manifest(str(tmp_path / "orch.jsonl"))
     assert man["end"]["transfers"] == 1
     assert man["end"]["compiles"] == rec["totals"]["compiles"]
+
+
+@pytest.mark.slow
+def test_scan_chunk_compile_contract(tmp_path):
+    """The fused engine's compile contract: one ``_chunk_fn`` compile per
+    chunk *length* (statics fixed within a run), then cache hits.  With
+    ``n_segments=5`` and ``checkpoint_every=2`` the post-0 segments chunk
+    as [1], [2, 3], [4]: the len-1 chunk compiles, the len-2 chunk is a
+    new shape and compiles again, and the final len-1 chunk is a cache
+    hit.  The ONE-transfer-per-run contract holds under the scan too."""
+    from repro.core.exchange import ExchangeConfig
+    from repro.core.pipeline import PipelineConfig
+    from repro.core.qlearning import RLConfig
+    from repro.data import partition_by_classes
+    from repro.data.synthetic import fmnist_like_split
+    from repro.dynamics import OrchestratorConfig, run_orchestrator
+    from repro.fl import FLConfig
+    from repro.models.autoencoder import AEConfig
+
+    ds, ev = fmnist_like_split(jax.random.PRNGKey(0), n_train_per_class=40,
+                               n_eval_per_class=10)
+    xs, ys, _ = partition_by_classes(0, ds.images, ds.labels, n_clients=6,
+                                     classes_per_client=3)
+    ae_cfg = AEConfig(28, 28, 1, widths=(4, 8), latent_dim=8)
+    cfg = OrchestratorConfig(
+        n_segments=5, iters_per_segment=10, mode="online",
+        rediscover_every=1, burst_episodes=60,
+        pipeline=PipelineConfig(
+            rl=RLConfig(n_episodes=120, buffer_size=30),
+            exchange=ExchangeConfig(apply_channel_failure=True,
+                                    overflow="drop",
+                                    reserve_selector="device")),
+        fl=FLConfig(tau_a=10, eval_every=10, batch_size=16),
+        segment_impl="scan",
+        checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_every=2)
+
+    obs.enable(manifest=str(tmp_path / "scan.jsonl"))
+    run_orchestrator(jax.random.PRNGKey(21), xs, ys, ae_cfg, cfg,
+                     "fading", ev.images)
+    rec = obs.disable()
+    evs = rec["events"]
+
+    chunks = [e for e in evs if e.name == "scan-chunk"]
+    assert [(e.attrs["start"], e.attrs["n_segments"])
+            for e in chunks] == [(1, 1), (2, 2), (4, 1)]
+    assert chunks[0].compiles > 0           # first len-1 chunk program
+    assert chunks[1].compiles > 0           # len-2 chunk: new xs shapes
+    assert chunks[2].compiles == 0, (       # len-1 again: cache hit
+        f"final chunk retraced: {chunks[2].compiles} compile events")
+
+    # the deferred-metrics contract survives fusion: ONE transfer per run
+    assert rec["totals"]["transfers"] == 1
+    mat = [e for e in evs if e.name == "metrics-materialize"]
+    assert len(mat) == 1 and mat[0].transfers == 1

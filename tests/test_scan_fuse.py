@@ -1,0 +1,117 @@
+"""Fused-segment-scan parity: ``segment_impl="scan"`` must reproduce the
+eager loop (the parity oracle) on every scenario x mode combination the
+online runtime supports — int/bool metrics exactly, float metrics to
+float32 accumulation tolerance, trust graphs bit-equal, final global
+parameters bit-equal.  Both sides run with ``reserve_selector="device"``
+so the comparison isolates the *engine* (eager dispatch vs lax.scan), not
+the reserve-sampling stream."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow
+
+KEY = jax.random.PRNGKey(7)
+
+INT_FIELDS = ("n_available", "moved", "n_live", "n_failed",
+              "retried", "retry_delivered", "rediscovered")
+FLOAT_FIELDS = ("eval_loss", "link_churn", "mean_pfail",
+                "expected_delivery", "realized_delivery")
+
+
+@pytest.fixture(scope="module")
+def world():
+    from repro.data import partition_by_classes
+    from repro.data.synthetic import fmnist_like_split
+    from repro.models.autoencoder import AEConfig
+    ds, ev = fmnist_like_split(jax.random.PRNGKey(0), n_train_per_class=40,
+                               n_eval_per_class=10)
+    xs, ys, _ = partition_by_classes(0, ds.images, ds.labels, n_clients=6,
+                                     classes_per_client=3)
+    return xs, ys, AEConfig(28, 28, 1, widths=(4, 8), latent_dim=8), ev.images
+
+
+def _cfg(impl, mode):
+    from repro.core.exchange import ExchangeConfig
+    from repro.core.pipeline import PipelineConfig
+    from repro.core.qlearning import RLConfig
+    from repro.dynamics import OrchestratorConfig
+    from repro.fl import FLConfig
+    return OrchestratorConfig(
+        n_segments=3, iters_per_segment=20, mode=mode,
+        rediscover_every=1, burst_episodes=60,
+        pipeline=PipelineConfig(
+            rl=RLConfig(n_episodes=120, buffer_size=30),
+            exchange=ExchangeConfig(apply_channel_failure=True,
+                                    overflow="drop",
+                                    reserve_selector="device")),
+        fl=FLConfig(tau_a=10, eval_every=20, batch_size=16),
+        segment_impl=impl)
+
+
+def _run(world, impl, mode, scenario):
+    from repro.dynamics import run_orchestrator
+    xs, ys, ae_cfg, ev = world
+    return run_orchestrator(KEY, xs, ys, ae_cfg, _cfg(impl, mode),
+                            scenario, ev)
+
+
+def _assert_parity(eager, scan):
+    assert len(eager.trace.segments) == len(scan.trace.segments)
+    for pe, ps in zip(eager.trace.segments, scan.trace.segments):
+        np.testing.assert_array_equal(pe.in_edge, ps.in_edge)
+        for f in INT_FIELDS:
+            assert getattr(pe, f) == getattr(ps, f), \
+                f"segment {pe.segment}: {f}"
+        for f in FLOAT_FIELDS:
+            a, b = getattr(pe, f), getattr(ps, f)
+            if a is None or b is None:
+                assert a == b, f"segment {pe.segment}: {f}"
+                continue
+            np.testing.assert_allclose(
+                np.float64(a), np.float64(b), rtol=1e-4, atol=1e-6,
+                equal_nan=True, err_msg=f"segment {pe.segment}: {f}")
+        np.testing.assert_array_equal(pe.eval_iters, ps.eval_iters)
+        np.testing.assert_allclose(pe.eval_curve, ps.eval_curve,
+                                   rtol=1e-4, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(eager.in_edge),
+                                  np.asarray(scan.in_edge))
+    for a, b in zip(jax.tree.leaves(eager.global_params),
+                    jax.tree.leaves(scan.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("scenario", ["static", "fading", "churn"])
+@pytest.mark.parametrize("mode", ["online", "uniform"])
+def test_scan_matches_eager(world, scenario, mode):
+    _assert_parity(_run(world, "eager", mode, scenario),
+                   _run(world, "scan", mode, scenario))
+
+
+def test_scan_matches_eager_under_faults(world):
+    """The fault overlay (link burst) plus channel sampling goes through
+    the traced ``_active`` window path inside the scan — metrics incl.
+    n_live/n_failed must still match the eager loop exactly."""
+    _assert_parity(_run(world, "eager", "online", "burst-outage"),
+                   _run(world, "scan", "online", "burst-outage"))
+
+
+def test_scan_validates_config(world):
+    """The fused engine supports exactly the array-plane configuration;
+    everything else must fail loudly, not silently fall back."""
+    from repro.dynamics import run_orchestrator
+    xs, ys, ae_cfg, ev = world
+    cfg = _cfg("scan", "online")
+    bad_sel = dataclasses.replace(
+        cfg, pipeline=dataclasses.replace(
+            cfg.pipeline, exchange=dataclasses.replace(
+                cfg.pipeline.exchange, reserve_selector="host")))
+    with pytest.raises(ValueError, match="reserve_selector"):
+        run_orchestrator(KEY, xs, ys, ae_cfg, bad_sel, "static", ev)
+    with pytest.raises(ValueError, match="segment_impl"):
+        run_orchestrator(KEY, xs, ys, ae_cfg,
+                         dataclasses.replace(cfg, segment_impl="fused"),
+                         "static", ev)

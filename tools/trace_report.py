@@ -104,6 +104,15 @@ def report(path: str, top: Optional[int] = None) -> str:
     rows = phase_table(man["spans"])
     if top:
         rows = rows[:top]
+    n_chunks = sum(1 for s in man["spans"] if s["name"] == "scan-chunk")
+    if n_chunks:
+        lines.append(
+            f"fused run: {n_chunks} scan-chunk span(s) execute the post-0 "
+            "segments as single device programs — the per-phase rows below "
+            "attribute only the eager prefix (segment 0) and the "
+            "chunk-boundary host work; everything inside a chunk lands in "
+            "its scan-chunk row.")
+        lines.append("")
     head = (f"{'phase':<24}{'count':>6}{'total_s':>10}{'mean_ms':>10}"
             f"{'self_s':>9}{'%run':>7}{'compiles':>9}{'transfers':>10}")
     lines.append(head)
